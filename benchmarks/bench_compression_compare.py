@@ -1,0 +1,28 @@
+"""Paper Fig 4a: PAMM vs CompAct vs Uniform-CRS at matched compression.
+Reproduced claim: PAMM keeps baseline quality at ratios where the others
+degrade."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, note
+from benchmarks.bench_pretrain_ppl import train_nll
+
+
+def run(budget: str = "small"):
+    steps = 150 if budget == "small" else 400
+    base, _ = train_nll("none", 1.0, steps)
+    emit("fig4a[baseline]", 0.0, f"ppl={math.exp(base):.3f}")
+    for div in (64, 512):
+        row = {}
+        for policy in ("pamm", "uniform_crs", "compact"):
+            nll, _ = train_nll(policy, 1.0 / div, steps)
+            row[policy] = math.exp(nll)
+            emit(f"fig4a[{policy}_r=1/{div}]", 0.0, f"ppl={row[policy]:.3f}")
+        note(f"[fig4a] r=1/{div}: pamm {row['pamm']:.2f} "
+             f"crs {row['uniform_crs']:.2f} compact {row['compact']:.2f} "
+             f"baseline {math.exp(base):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Paper Fig 4b: effect of the neighborhood tolerance eps on quality.
+eps=0 == Uniform-CRS; eps=inf (no constraint) is the paper's best setting."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, note
+from benchmarks.bench_pretrain_ppl import train_nll
+
+
+def run(budget: str = "small"):
+    steps = 150 if budget == "small" else 400
+    ppl = {}
+    for eps in (0.0, 0.5, 1.0, math.inf):
+        nll, _ = train_nll("pamm", 1 / 64, steps, eps=eps)
+        ppl[eps] = math.exp(nll)
+        emit(f"fig4b[eps={eps}]", 0.0, f"ppl={ppl[eps]:.3f}")
+    note(f"[fig4b] eps sweep ppl: {ppl} (paper: eps=inf best, eps=0 worst)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Paper App. H (Fig 6/7): relative L2 error of the approximated weight
+gradient and PAMM coverage, over (r, eps) grids, measured on REAL
+activations of a partially-trained model (K projection input, as in the
+paper)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, note
+from repro.configs import RunConfig, get_config
+from repro.core.pamm import num_generators, pamm_apply, pamm_compress
+from repro.data import SyntheticStream
+from repro.train import init_train_state, make_train_step
+
+
+def _get_activation(steps=60):
+    """Train llama-tiny briefly, then capture the layer-1 attention input X
+    and a matching upstream gradient dZ."""
+    cfg = get_config("llama-tiny")
+    rcfg = RunConfig(policy_name="none", lr=5e-3,
+                     compute_dtype="float32", param_dtype="float32")
+    state, _ = init_train_state(cfg, rcfg, jax.random.key(0))
+    stream = SyntheticStream.for_arch(cfg, 64, 16)
+    step_fn = jax.jit(make_train_step(cfg, rcfg, total_steps=steps))
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.get_batch(i).items()}
+        state, _ = step_fn(state, batch, jnp.int32(i))
+
+    # capture X (input to QKV of layer 1) and dZ (grad at the K projection)
+    from repro.models import loss_fn, make_run_policy
+    from repro.models.layers import rms_norm
+
+    params = state.params
+    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(steps).items()}
+    blk = jax.tree.map(lambda t: t[1], params["stages"][0][0])
+    emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = rms_norm(emb, blk["norm1"], cfg.norm_eps).reshape(-1, cfg.d_model)
+
+    # upstream gradient surrogate: correlated with the K projection output
+    # (the real dZ needs a per-layer grad tap; the error statistics only
+    # require realistic X — dZ enters the comparison linearly)
+    wk = blk["attn"]["wk"]
+    dz = (x @ wk) * 0.01 + 0.001 * jax.random.normal(
+        jax.random.key(2), (x.shape[0], wk.shape[1])
+    )
+    return x, dz
+
+
+def run(budget: str = "small"):
+    x, dz = _get_activation()
+    b = x.shape[0]
+    exact = np.asarray(x.T @ dz)
+    nex = np.linalg.norm(exact)
+
+    note(f"[appH] activations: {x.shape}, tokens b={b}")
+    for div in (16, 64, 256):
+        for eps in (0.0, 0.2, 1.0, math.inf):
+            k = num_generators(b, 1.0 / div)
+            st = pamm_compress(x, k, eps, jax.random.key(3))
+            approx = np.asarray(pamm_apply(st, dz))
+            rel = np.linalg.norm(approx - exact) / nex
+            coverage = float(jnp.mean((st.alpha != 0).astype(jnp.float32)))
+            emit(f"fig6_7[r=1/{div},eps={eps}]", 0.0,
+                 f"rel_l2={rel:.3f} coverage={coverage:.3f}")
+    note("[appH] expectations: error falls with eps and with r; coverage "
+         "rises with eps and r; eps=inf coverage=1 (paper Figs 6-7)")
+
+
+if __name__ == "__main__":
+    run()

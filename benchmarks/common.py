@@ -1,0 +1,29 @@
+"""Shared benchmark utilities. Every harness prints ``name,us_per_call,derived``
+CSV rows (harness contract) plus human-readable notes on stderr."""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (fn must return jax arrays)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def note(msg: str):
+    print(msg, file=sys.stderr, flush=True)

@@ -1,0 +1,115 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json. Writes experiments/tables.md (pasted into
+EXPERIMENTS.md by the author; kept as a script so the tables are always
+regenerable from artifacts)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+
+def fmt_b(x):
+    if x is None:
+        return "—"
+    for unit, div in (("TB", 2**40), ("GB", 2**30), ("MB", 2**20), ("KB", 2**10)):
+        if abs(x) >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def main():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        if "__" not in os.path.basename(path):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+
+    out = []
+    out.append("### Dry-run matrix (status per arch x shape x mesh)\n")
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    out.append("| arch | " + " | ".join(shapes) + " |")
+    out.append("|---" * (len(shapes) + 1) + "|")
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            marks = []
+            for mesh in ("16x16", "2x16x16"):
+                c = next((c for c in cells if c["arch"] == a and c["shape"] == s
+                          and c["mesh"] == mesh and "rcfg_overrides" not in c), None)
+                if c is None:
+                    marks.append("?")
+                elif c["status"] == "ok":
+                    marks.append("OK")
+                elif c["status"] == "skipped":
+                    marks.append("skip")
+                else:
+                    marks.append("ERR")
+            row.append("/".join(marks))
+        out.append("| " + " | ".join(row) + " |")
+
+    out.append("\n### Per-cell dry-run detail (single-pod 16x16)\n")
+    out.append("| arch | shape | compile_s | args/chip | temp/chip | flops/chip | "
+               "coll bytes/chip | AR | AG | RS | A2A | CP |")
+    out.append("|---" * 12 + "|")
+    for c in cells:
+        if c["mesh"] != "16x16" or c["status"] != "ok" or "rcfg_overrides" in c:
+            continue
+        m, k = c["memory"], c["collectives"]
+        cnt = k["counts"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['compile_s']} | "
+            f"{fmt_b(m['argument_bytes'])} | {fmt_b(m['temp_bytes'])} | "
+            f"{c['cost']['flops_per_device']:.3g} | {fmt_b(k['total_bytes'])} | "
+            f"{cnt.get('all-reduce', 0):.0f} | {cnt.get('all-gather', 0):.0f} | "
+            f"{cnt.get('reduce-scatter', 0):.0f} | {cnt.get('all-to-all', 0):.0f} | "
+            f"{cnt.get('collective-permute', 0):.0f} |"
+        )
+
+    out.append("\n### Roofline terms (single-pod 16x16, v5e: 197 TF/s bf16, "
+               "819 GB/s HBM, 50 GB/s/link ICI)\n")
+    out.append("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+               "6ND/HLO | MFU bound |")
+    out.append("|---" * 9 + "|")
+    for c in cells:
+        if c["mesh"] != "16x16" or c["status"] != "ok" or "rcfg_overrides" in c:
+            continue
+        r = c["roofline"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s', '')} | {(r['useful_fraction'] or 0):.3f} | "
+            f"{(r['mfu_upper_bound'] or 0):.4f} |"
+        )
+
+    out.append("\n### Multi-pod (2x16x16) deltas vs single-pod\n")
+    out.append("| arch | shape | coll bytes 16x16 | coll bytes 2x16x16 | "
+               "extra DCN traffic |")
+    out.append("|---" * 6 + "|")
+    for a in archs:
+        for s in shapes:
+            c1 = next((c for c in cells if c["arch"] == a and c["shape"] == s
+                       and c["mesh"] == "16x16" and c["status"] == "ok"
+                       and "rcfg_overrides" not in c), None)
+            c2 = next((c for c in cells if c["arch"] == a and c["shape"] == s
+                       and c["mesh"] == "2x16x16" and c["status"] == "ok"
+                       and "rcfg_overrides" not in c), None)
+            if not c1 or not c2:
+                continue
+            b1 = c1["collectives"]["total_bytes"]
+            b2 = c2["collectives"]["total_bytes"]
+            out.append(f"| {a} | {s} | {fmt_b(b1)} | {fmt_b(b2)} | {fmt_b(b2 - b1)} |")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/tables.md", "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote experiments/tables.md ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

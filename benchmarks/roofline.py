@@ -1,0 +1,76 @@
+"""Deliverable (g): aggregate the dry-run JSONs into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS, and an MFU upper bound. Also emits the
+markdown table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, note
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(cells, mesh="16x16") -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful (6ND/HLO) | MFU bound | HBM GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | ERROR | — | — | — |")
+            continue
+        r = c["roofline"]
+        mem = c["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{(r['useful_fraction'] or 0):.3f} | "
+            f"{(r['mfu_upper_bound'] or 0):.4f} | {hbm:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def run(budget: str = "small"):
+    cells = load_cells()
+    if not cells:
+        note("[roofline] no dry-run artifacts found — run "
+             "`python -m repro.launch.dryrun --all` first")
+        return
+    ok = [c for c in cells if c["status"] == "ok"]
+    for c in ok:
+        r = c["roofline"]
+        emit(
+            f"roofline[{c['arch']}|{c['shape']}|{c['mesh']}]",
+            r["step_time_lower_bound_s"] * 1e6,
+            f"dom={r['dominant']} useful={(r['useful_fraction'] or 0):.3f} "
+            f"mfu_bound={(r['mfu_upper_bound'] or 0):.4f}",
+        )
+    note(f"[roofline] {len(ok)} ok cells / {len(cells)} total")
+    note(markdown_table(cells, mesh="16x16"))
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown_table(load_cells(), "16x16"))

@@ -1,0 +1,50 @@
+"""Benchmark driver — one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--budget full`` uses the
+larger configurations (slower; CPU container default is small).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+HARNESSES = [
+    ("table2_throughput", "benchmarks.bench_throughput"),
+    ("fig3a_table5_pretrain_ppl_memory", "benchmarks.bench_pretrain_ppl"),
+    ("table3_bs_seq_ablation", "benchmarks.bench_ablation_bs_seq"),
+    ("fig4a_compression_compare", "benchmarks.bench_compression_compare"),
+    ("fig4b_epsilon", "benchmarks.bench_epsilon"),
+    ("appH_l2_error_coverage", "benchmarks.bench_l2_error"),
+    ("appJ_complexity", "benchmarks.bench_complexity"),
+    ("roofline_dryrun", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", choices=["small", "full"], default="small")
+    ap.add_argument("--only", default=None, help="substring filter on harness name")
+    args = ap.parse_args()
+
+    import importlib
+
+    failures = 0
+    for name, module in HARNESSES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            importlib.import_module(module).run(budget=args.budget)
+        except Exception as e:  # keep the suite running; report at the end
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} took {time.monotonic() - t0:.1f}s", file=sys.stderr, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

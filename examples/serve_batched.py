@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a prompt batch, stream greedy tokens.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch internlm2-1.8b_smoke
+"""
+import argparse
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b_smoke")
+    args = ap.parse_args()
+    serve_cli.main(["--arch", args.arch, "--batch", "4",
+                    "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpointer import (
+    CheckpointManager,
+    available_steps,
+    load,
+    save,
+)
+
+__all__ = ["CheckpointManager", "available_steps", "load", "save"]

@@ -1,0 +1,166 @@
+"""Sharded, integrity-checked, async checkpointing with elastic restore.
+
+Layout of a checkpoint directory::
+
+    <root>/step_000123/
+        arrays.npz          # flattened pytree, '/'-joined path keys
+        manifest.json       # step, tree paths, shapes, dtypes, crc32 per array
+
+Features required at fleet scale (and tested in tests/test_checkpoint.py):
+  * atomic publish — write to ``<dir>.tmp`` then ``os.rename`` so a crashed
+    save can never be mistaken for a valid checkpoint;
+  * CRC32 integrity manifest verified on load (bit-rot / torn writes);
+  * async save (background thread) so the train loop never blocks on I/O;
+  * keep-last-N garbage collection;
+  * **elastic restore**: ``load(..., shardings=...)`` re-lays-out every leaf
+    onto an arbitrary new mesh, so a job can restart on a different pod
+    count than it saved from;
+  * resumable data state: the step is the only data-pipeline state
+    (data/pipeline.py is stateless-deterministic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(root: str, step: int, tree, *, extra_meta: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the published directory."""
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "extra": extra_meta or {},
+        "arrays": {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()),
+            }
+            for k, v in arrays.items()
+        },
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def available_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(root, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def load(root: str, like_tree, *, step: int | None = None, shardings=None,
+         verify: bool = True):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of Shardings — leaves are
+    device_put onto them (elastic restore onto any mesh). Returns
+    (tree, step).
+    """
+    steps = available_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    shard_flat = (
+        jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(flat)
+    )
+    leaves = []
+    for (path, like), shard in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        meta = manifest["arrays"][key]
+        if arr.dtype.kind == "V":
+            # non-native dtypes (bfloat16, float8*) round-trip npz as raw
+            # void bytes; re-view with the manifest's logical dtype
+            import ml_dtypes  # noqa: F401  (registers the dtype names)
+
+            arr = arr.view(np.dtype(meta["dtype"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise IOError(f"CRC mismatch for {key}: checkpoint corrupt")
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {like.shape}")
+        arr = arr.astype(like.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None else jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"]
+
+
+class CheckpointManager:
+    """Async save + keep-last-N GC."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, extra_meta=None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
+
+        def work():
+            save(self.root, step, host_tree, extra_meta=extra_meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, tree, extra_meta=None):
+        self.wait()
+        save(self.root, step, tree, extra_meta=extra_meta)
+        self._gc()
+
+    def _gc(self):
+        steps = available_steps(self.root)
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"), ignore_errors=True)
+
+    def latest_step(self) -> int | None:
+        steps = available_steps(self.root)
+        return steps[-1] if steps else None

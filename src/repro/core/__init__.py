@@ -1,0 +1,38 @@
+"""PAMM core: the paper's contribution as a composable JAX module."""
+from repro.core.linear import PAMM_CHECKPOINT_NAME, compressed_linear
+from repro.core.pamm import (
+    PammState,
+    num_generators,
+    pamm_apply,
+    pamm_compress,
+    pamm_reconstruct,
+    stored_elements,
+)
+from repro.core.policies import (
+    CompActPolicy,
+    CompressionPolicy,
+    ExactPolicy,
+    PammPolicy,
+    UniformCRSPolicy,
+    make_policy,
+)
+from repro.core.stats import ActivationReport, qkv_activation_bytes
+
+__all__ = [
+    "PAMM_CHECKPOINT_NAME",
+    "compressed_linear",
+    "PammState",
+    "num_generators",
+    "pamm_apply",
+    "pamm_compress",
+    "pamm_reconstruct",
+    "stored_elements",
+    "CompActPolicy",
+    "CompressionPolicy",
+    "ExactPolicy",
+    "PammPolicy",
+    "UniformCRSPolicy",
+    "make_policy",
+    "ActivationReport",
+    "qkv_activation_bytes",
+]

@@ -1,0 +1,155 @@
+"""Compressed linear layer (paper Alg. 2/3) as a JAX custom_vjp.
+
+Design: the compressed state is computed *outside* the custom_vjp and passed
+in as an argument, so that
+
+  * the custom_vjp residuals are exactly ``(w, state)`` — X itself is never
+    saved, which *is* the paper's memory claim expressed in JAX terms;
+  * ``jax.ad_checkpoint.checkpoint_name`` tags on the state leaves make PAMM
+    compose with remat: a ``save_only_these_names('pamm_state')`` policy
+    keeps the tiny compressed state across the remat boundary while the rest
+    of the block is recomputed (beyond-paper integration, see DESIGN.md §3);
+  * in a forward-only (inference) jit the state is dead code and XLA erases
+    the whole compression — inference is bit-identical to a plain matmul.
+
+The forward output is the *exact* ``x @ w (+ bias)``; only grad_W of this
+layer is approximated. grad_X and grad_bias are exact (paper Alg. 3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.policies import CompressionPolicy, ExactPolicy
+
+__all__ = ["compressed_linear", "compressed_linear_shared", "PAMM_CHECKPOINT_NAME"]
+
+PAMM_CHECKPOINT_NAME = "pamm_state"
+
+
+def _zero_cotangent(x):
+    """Cotangent of a non-differentiated input: zeros, or float0 for ints."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _compressed_matmul(policy: CompressionPolicy, has_bias: bool):
+    """custom_vjp factory, cached per (policy, has_bias)."""
+
+    if has_bias:
+
+        @jax.custom_vjp
+        def f(x2d, w, bias, state):
+            del state
+            return (x2d @ w.astype(x2d.dtype)) + bias.astype(x2d.dtype)
+
+        def fwd(x2d, w, bias, state):
+            return f(x2d, w, bias, state), (w, state)
+
+        def bwd(res, g):
+            w, state = res
+            dx = (g @ w.T.astype(g.dtype)).astype(g.dtype)
+            dw = policy.grad_w(state, g, w.shape[0]).astype(w.dtype)
+            dbias = jnp.sum(g, axis=0).astype(w.dtype)
+            dstate = jax.tree.map(_zero_cotangent, state)
+            return dx, dw, dbias, dstate
+
+    else:
+
+        @jax.custom_vjp
+        def f(x2d, w, state):
+            del state
+            return x2d @ w.astype(x2d.dtype)
+
+        def fwd(x2d, w, state):
+            return f(x2d, w, state), (w, state)
+
+        def bwd(res, g):
+            w, state = res
+            dx = (g @ w.T.astype(g.dtype)).astype(g.dtype)
+            dw = policy.grad_w(state, g, w.shape[0]).astype(w.dtype)
+            dstate = jax.tree.map(_zero_cotangent, state)
+            return dx, dw, dstate
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def compressed_linear(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None,
+    key: jax.Array | None,
+    policy: CompressionPolicy,
+) -> jax.Array:
+    """``x @ w (+ bias)`` storing only ``policy.compress(x)`` for backward.
+
+    x: (..., n); w: (n, m); bias: (m,) or None; key: PRNG key for the
+    policy's sampling (may be None for the exact policy).
+    """
+    n, m = w.shape
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, n)
+
+    if isinstance(policy, ExactPolicy):
+        # Fast path: plain differentiable matmul (identical math, lets XLA
+        # fuse/choose layouts freely for the full-rank baseline).
+        z2d = x2d @ w.astype(x2d.dtype)
+        if bias is not None:
+            z2d = z2d + bias.astype(z2d.dtype)
+        return z2d.reshape(*lead, m)
+
+    if key is None:
+        raise ValueError(f"policy {policy.name!r} needs a PRNG key")
+
+    state = policy.compress(jax.lax.stop_gradient(x2d), key)
+    state = jax.tree.map(lambda t: checkpoint_name(t, PAMM_CHECKPOINT_NAME), state)
+    fn = _compressed_matmul(policy, bias is not None)
+    z2d = fn(x2d, w, bias, state) if bias is not None else fn(x2d, w, state)
+    return z2d.reshape(*lead, m)
+
+
+def compressed_linear_shared(
+    x: jax.Array,
+    ws: list[jax.Array],
+    biases: list[jax.Array | None],
+    key: jax.Array | None,
+    policy: CompressionPolicy,
+) -> list[jax.Array]:
+    """Several projections of the *same* input sharing ONE compressed state.
+
+    This is the paper's Fig. 2 setting: Q, K and V all read X, so X is
+    compressed once and the single state backs all three weight gradients —
+    a third of the compression compute and a third of the stored bytes
+    relative to compressing per-projection.
+    """
+    n = ws[0].shape[0]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, n)
+
+    if isinstance(policy, ExactPolicy):
+        outs = []
+        for w, bias in zip(ws, biases):
+            z2d = x2d @ w.astype(x2d.dtype)
+            if bias is not None:
+                z2d = z2d + bias.astype(z2d.dtype)
+            outs.append(z2d.reshape(*lead, w.shape[1]))
+        return outs
+
+    if key is None:
+        raise ValueError(f"policy {policy.name!r} needs a PRNG key")
+
+    state = policy.compress(jax.lax.stop_gradient(x2d), key)
+    state = jax.tree.map(lambda t: checkpoint_name(t, PAMM_CHECKPOINT_NAME), state)
+    outs = []
+    for w, bias in zip(ws, biases):
+        fn = _compressed_matmul(policy, bias is not None)
+        z2d = fn(x2d, w, bias, state) if bias is not None else fn(x2d, w, state)
+        outs.append(z2d.reshape(*lead, w.shape[1]))
+    return outs

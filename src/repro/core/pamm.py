@@ -1,0 +1,168 @@
+"""PAMM — Point-Approximate Matrix Multiplication (paper §3.2, Alg. 1).
+
+PAMM approximates ``O = A^T B`` (``A: (b, n)``, ``B: (b, m)``) by compressing
+``A`` into ``k = ceil(r * b)`` *generators* (rows sampled uniformly without
+replacement) plus per-row assignment/coefficient vectors:
+
+    f(i)    = argmax_j |csim(A_i, C_j)|              (Lemma 1)
+    alpha_i = csim(A_i, C_{f(i)}) * ||A_i|| / ||C_{f(i)}||
+    O ~ beta * C^T @ Btilde,   Btilde_j = sum_{i: f(i)=j} alpha_i * B_i
+
+The neighborhood condition ``||A_i - alpha_i C_{f(i)}|| <= eps ||A_i||``
+collapses, via the Lemma-1 projection identity
+``||A_i - Atilde_i||^2 = ||A_i||^2 (1 - csim^2)``, to
+
+    csim(A_i, C_{f(i)})^2 >= 1 - eps^2,
+
+so the test never materializes a (b, n) intermediate. ``beta = b / (b - eta)``
+(eta = #dropped rows) de-biases the estimate (paper Eq. 4-5).
+
+In the training integration (core/linear.py) ``A = X`` is the input of a
+Q/K/V projection and ``B = dZ`` the upstream gradient, so
+``grad_W ~ beta * C^T Btilde``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PammState",
+    "num_generators",
+    "pamm_compress",
+    "pamm_apply",
+    "pamm_reconstruct",
+    "stored_elements",
+]
+
+_NORM_EPS = 1e-20  # guards zero rows; a zero row gets csim = 0, alpha = 0.
+
+
+class PammState(NamedTuple):
+    """Compressed representation of A (the saved-for-backward payload)."""
+
+    generators: jax.Array  # (k, n)  C — sampled rows of A
+    alpha: jax.Array       # (b,)    projection coefficients (0 => dropped row)
+    assign: jax.Array      # (b,)    int32 generator index f(i)
+    beta: jax.Array        # ()      de-bias factor b / (b - eta)
+
+
+def num_generators(b: int, ratio: float) -> int:
+    """k = ceil(r * b), clamped to [1, b] (paper §4.1; k=1 is valid)."""
+    return max(1, min(b, math.ceil(ratio * b)))
+
+
+def pamm_compress(
+    a: jax.Array,
+    k: int,
+    eps: float,
+    key: jax.Array,
+    *,
+    compute_dtype=jnp.float32,
+) -> PammState:
+    """Compress ``a: (b, n)`` into ``k`` generators (Alg. 1 COMPRESS).
+
+    eps = inf (paper's best setting) keeps every row; eps = 0 reduces PAMM
+    to Uniform-CRS (only rows that *are* generators survive).
+    """
+    b, _ = a.shape
+    k = min(k, b)
+    idx = jax.random.choice(key, b, shape=(k,), replace=False)
+
+    a32 = a.astype(compute_dtype)
+    c = jnp.take(a32, idx, axis=0)                       # (k, n)
+    norm_a = jnp.linalg.norm(a32, axis=1)                # (b,)
+    norm_c = jnp.take(norm_a, idx)                       # (k,)
+
+    # csim(A, C): one (b, n) x (n, k) matmul + row/col normalization.
+    csim = (a32 @ c.T) / (
+        jnp.maximum(norm_a[:, None], _NORM_EPS) * jnp.maximum(norm_c[None, :], _NORM_EPS)
+    )
+    assign = jnp.argmax(jnp.abs(csim), axis=1).astype(jnp.int32)   # Lemma 1
+    cs = jnp.take_along_axis(csim, assign[:, None], axis=1)[:, 0]  # (b,)
+    alpha = cs * norm_a / jnp.maximum(jnp.take(norm_c, assign), _NORM_EPS)
+
+    # Neighborhood condition via the projection identity:
+    #   ||A_i - Atilde_i||^2 = ||A_i||^2 (1 - cs^2)  =>  keep iff cs^2 >= 1 - eps^2.
+    # eps = inf  => threshold -inf => keep all;  eps = 0 => keep iff |cs| = 1.
+    thresh = 1.0 - float(eps) * float(eps) if math.isfinite(eps) else -jnp.inf
+    keep = cs * cs >= thresh
+    alpha = jnp.where(keep, alpha, 0.0)
+
+    n_kept = jnp.sum(keep.astype(compute_dtype))
+    beta = b / jnp.maximum(n_kept, 1.0)
+    return PammState(c, alpha, assign, beta.astype(compute_dtype))
+
+
+def pamm_apply(state: PammState, bmat: jax.Array, *, compute_dtype=jnp.float32) -> jax.Array:
+    """Approximate ``A^T @ B`` from the compressed state (Alg. 1 APPROXMM).
+
+    ``Btilde = segment_sum(alpha * B, f)`` — on TPU this lowers to a one-hot
+    MXU matmul in the Pallas kernel (kernels/pamm_apply.py); this is the
+    pure-jnp reference semantics.
+    """
+    k = state.generators.shape[0]
+    b32 = bmat.astype(compute_dtype)
+    bprime = state.alpha[:, None].astype(compute_dtype) * b32
+    btilde = jax.ops.segment_sum(bprime, state.assign, num_segments=k)
+    return state.beta * (state.generators.astype(compute_dtype).T @ btilde)
+
+
+def pamm_compress_blocked(
+    a: jax.Array, k: int, eps: float, key: jax.Array, n_blocks: int,
+    *, compute_dtype=jnp.float32,
+) -> PammState:
+    """Shard-local PAMM: split the token axis into ``n_blocks`` contiguous
+    blocks and compress each independently with ``k / n_blocks`` generators.
+
+    This matches the paper's actual 8-GPU DDP setting (each GPU compresses
+    its own minibatch, App. D/F) and removes two scaling problems of the
+    naive global formulation at fleet scale:
+
+      * csim cost drops from b*k*n to b*k*n / n_blocks (with k = r*b the
+        global version is QUADRATIC in tokens; see EXPERIMENTS.md §Perf);
+      * with n_blocks == the data-parallel degree and the token axis
+        sharded over 'data', every block's sampling/csim/argmax stays
+        shard-local — zero cross-shard collectives in the compress path.
+
+    Stored bytes are identical (same total k). Returns a PammState whose
+    leading axes are stacked blocks: generators (S, k_loc, n), alpha (S,
+    b_loc), assign (S, b_loc), beta (S,).
+    """
+    b, n = a.shape
+    if n_blocks <= 1 or b % n_blocks or k < n_blocks:
+        st = pamm_compress(a, k, eps, key, compute_dtype=compute_dtype)
+        return PammState(
+            st.generators[None], st.alpha[None], st.assign[None], st.beta[None]
+        )
+    b_loc = b // n_blocks
+    k_loc = max(1, k // n_blocks)
+    ab = a.reshape(n_blocks, b_loc, n)
+    keys = jax.random.split(key, n_blocks)
+    return jax.vmap(
+        lambda xb, kb: pamm_compress(xb, k_loc, eps, kb, compute_dtype=compute_dtype)
+    )(ab, keys)
+
+
+def pamm_apply_blocked(state: PammState, bmat: jax.Array, *, compute_dtype=jnp.float32):
+    """Apply for a blocked state: sum of per-block C_s^T Btilde_s."""
+    n_blocks, b_loc = state.alpha.shape
+    bb = bmat.reshape(n_blocks, b_loc, -1)
+    outs = jax.vmap(
+        lambda st, g: pamm_apply(st, g, compute_dtype=compute_dtype)
+    )(state, bb)
+    return jnp.sum(outs, axis=0)
+
+
+def pamm_reconstruct(state: PammState) -> jax.Array:
+    """Materialize Atilde (b, n) — for analysis/tests only, never in training."""
+    rows = jnp.take(state.generators, state.assign, axis=0)
+    return state.alpha[:, None] * rows
+
+
+def stored_elements(b: int, n: int, k: int) -> int:
+    """Elements kept by PAMM: C (k*n) + alpha (b) + f (b) (paper App. J)."""
+    return k * n + 2 * b

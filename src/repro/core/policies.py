@@ -1,0 +1,203 @@
+"""Activation-compression policy registry.
+
+Every policy answers three questions about a linear layer ``Z = X W``:
+
+  * ``compress(x2d, key)``   -> what do we *store* instead of X?
+  * ``grad_w(state, gz2d)``  -> how do we rebuild ``grad_W ~ X^T dZ``?
+  * ``stored_elements(b,n)`` -> how many scalars does the state cost?
+
+Policies (all from the paper):
+  * ``pamm``        — the paper's contribution (eps = inf by default).
+  * ``uniform_crs`` — PAMM with eps = 0: keep only the k sampled rows,
+                      de-biased by beta = b/k (paper §4.1/§4.6 baseline).
+  * ``compact``     — CompAct (Shamshoum 2025): Gaussian sketch X P along
+                      the *hidden* axis, E[P P^T] = I  (paper §4.6 baseline).
+  * ``none``        — exact training: store X itself (the full-rank baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pamm as pamm_lib
+
+__all__ = [
+    "CompressionPolicy",
+    "PammPolicy",
+    "UniformCRSPolicy",
+    "CompActPolicy",
+    "ExactPolicy",
+    "make_policy",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Base class. Frozen + hashable so policies can key jit caches."""
+
+    name: str = "base"
+
+    def compress(self, x2d: jax.Array, key: jax.Array) -> Any:
+        raise NotImplementedError
+
+    def grad_w(self, state: Any, gz2d: jax.Array, n: int) -> jax.Array:
+        """Approximate X^T dZ. ``n`` is the (static) hidden width of X."""
+        raise NotImplementedError
+
+    def stored_elements(self, b: int, n: int) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactPolicy(CompressionPolicy):
+    name: str = "none"
+
+    def compress(self, x2d, key):
+        del key
+        return x2d
+
+    def grad_w(self, state, gz2d, n):
+        del n
+        return state.astype(jnp.float32).T @ gz2d.astype(jnp.float32)
+
+    def stored_elements(self, b, n):
+        return b * n
+
+
+@dataclasses.dataclass(frozen=True)
+class PammPolicy(CompressionPolicy):
+    """Paper default: r down to 1/512, eps = inf (§4.1).
+
+    n_blocks > 1 switches to shard-local (blocked) PAMM — the paper's DDP
+    semantics, and the §Perf fix for the b^2 csim scaling (set it to the
+    data-parallel degree). k_max optionally caps generators per block at
+    the Lemma-2 scale (k = O(ln b) suffices for coverage).
+    """
+
+    name: str = "pamm"
+    ratio: float = 1.0 / 512.0
+    eps: float = math.inf
+    use_kernel: bool = False  # route through the Pallas TPU kernels (kernels/ops.py)
+    n_blocks: int = 1
+    k_max: int | None = None
+
+    def k_for(self, b: int) -> int:
+        k = pamm_lib.num_generators(b, self.ratio)
+        if self.k_max is not None:
+            k = min(k, max(self.n_blocks, self.k_max * max(1, self.n_blocks)))
+        return k
+
+    def compress(self, x2d, key):
+        b = x2d.shape[0]
+        k = self.k_for(b)
+        if self.n_blocks > 1:
+            return pamm_lib.pamm_compress_blocked(x2d, k, self.eps, key, self.n_blocks)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.pamm_compress(x2d, k, self.eps, key)
+        return pamm_lib.pamm_compress(x2d, k, self.eps, key)
+
+    def grad_w(self, state, gz2d, n):
+        del n
+        if self.n_blocks > 1:
+            return pamm_lib.pamm_apply_blocked(state, gz2d)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.pamm_apply(state, gz2d)
+        return pamm_lib.pamm_apply(state, gz2d)
+
+    def stored_elements(self, b, n):
+        return pamm_lib.stored_elements(b, n, self.k_for(b))
+
+
+class _CRSState(NamedTuple):
+    rows: jax.Array  # (k, n) sampled rows of X
+    idx: jax.Array   # (k,)   their positions in [b]
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformCRSPolicy(CompressionPolicy):
+    """Column-row sampling: grad_W ~ (b/k) * X[I]^T dZ[I] (PAMM @ eps=0)."""
+
+    name: str = "uniform_crs"
+    ratio: float = 1.0 / 512.0
+
+    def k_for(self, b: int) -> int:
+        return pamm_lib.num_generators(b, self.ratio)
+
+    def compress(self, x2d, key):
+        b = x2d.shape[0]
+        idx = jax.random.choice(key, b, shape=(self.k_for(b),), replace=False)
+        return _CRSState(jnp.take(x2d, idx, axis=0), idx.astype(jnp.int32))
+
+    def grad_w(self, state, gz2d, n):
+        del n
+        b = gz2d.shape[0]
+        k = state.idx.shape[0]
+        gsel = jnp.take(gz2d.astype(jnp.float32), state.idx, axis=0)
+        return (b / k) * (state.rows.astype(jnp.float32).T @ gsel)
+
+    def stored_elements(self, b, n):
+        return self.k_for(b) * (n + 1)
+
+
+class _CompActState(NamedTuple):
+    sketch: jax.Array    # (b, kp) = X P
+    key_data: jax.Array  # raw PRNG key data; P is regenerated in backward
+
+
+@dataclasses.dataclass(frozen=True)
+class CompActPolicy(CompressionPolicy):
+    """CompAct: X~ = X P, P ~ N(0, 1/kp), E[P P^T] = I_n.
+
+    grad_W ~ P (X~^T dZ). Compresses the hidden axis — the paper's point is
+    that this axis is far *less* redundant than the token axis, so quality
+    collapses at high ratios (Fig. 4a).
+    """
+
+    name: str = "compact"
+    ratio: float = 1.0 / 4.0  # ratio over the hidden axis: kp = ceil(ratio * n)
+
+    def kp_for(self, n: int) -> int:
+        return max(1, min(n, math.ceil(self.ratio * n)))
+
+    def _proj(self, key_data: jax.Array, n: int, kp: int) -> jax.Array:
+        key = jax.random.wrap_key_data(key_data)
+        return jax.random.normal(key, (n, kp), dtype=jnp.float32) / jnp.sqrt(kp)
+
+    def compress(self, x2d, key):
+        n = x2d.shape[1]
+        kp = self.kp_for(n)
+        key_data = jax.random.key_data(key)
+        p = self._proj(key_data, n, kp)
+        return _CompActState(x2d.astype(jnp.float32) @ p, key_data)
+
+    def grad_w(self, state, gz2d, n):
+        # grad_W = P @ (sketch^T dZ); P is regenerated from the stored key.
+        kp = state.sketch.shape[1]
+        p = self._proj(state.key_data, n, kp)
+        st = state.sketch.astype(jnp.float32).T @ gz2d.astype(jnp.float32)  # (kp, m)
+        return p @ st
+
+    def stored_elements(self, b, n):
+        return b * self.kp_for(n)
+
+
+_REGISTRY = {
+    "pamm": PammPolicy,
+    "uniform_crs": UniformCRSPolicy,
+    "compact": CompActPolicy,
+    "none": ExactPolicy,
+}
+
+
+def make_policy(name: str, **kwargs) -> CompressionPolicy:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compression policy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

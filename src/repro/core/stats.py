@@ -1,0 +1,67 @@
+"""Activation-memory accounting (paper Fig. 3b / Table 5 methodology).
+
+The paper reports "peak attention memory" = bytes of all saved Q/K/V
+projection input activations. In JAX terms that is the byte size of the
+custom_vjp residual states across all attention layers. We compute it
+analytically from the policy + shapes so benchmarks can report it for any
+configuration without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.policies import CompressionPolicy
+
+__all__ = ["ActivationReport", "qkv_activation_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationReport:
+    policy: str
+    layers: int
+    tokens_per_batch: int
+    hidden: int
+    baseline_bytes: int
+    compressed_bytes: int
+
+    @property
+    def saving(self) -> float:
+        return 1.0 - self.compressed_bytes / max(1, self.baseline_bytes)
+
+    def __str__(self) -> str:
+        mb = 1024 * 1024
+        return (
+            f"[{self.policy}] QKV activations over {self.layers} layers: "
+            f"{self.compressed_bytes / mb:.2f} MB vs {self.baseline_bytes / mb:.2f} MB "
+            f"baseline ({100 * self.saving:.2f}% saved)"
+        )
+
+
+def qkv_activation_bytes(
+    policy: CompressionPolicy,
+    *,
+    n_layers: int,
+    batch: int,
+    seq: int,
+    hidden: int,
+    dtype=jnp.bfloat16,
+) -> ActivationReport:
+    """Bytes stored for the QKV projections' inputs across the whole model.
+
+    One state per attention layer (shared by the fused QKV projection — a
+    single X feeds Q, K and V, so it is compressed once; see DESIGN.md §1).
+    """
+    b = batch * seq
+    itemsize = jnp.dtype(dtype).itemsize
+    baseline = n_layers * b * hidden * itemsize
+    compressed = n_layers * policy.stored_elements(b, hidden) * itemsize
+    return ActivationReport(
+        policy=policy.name,
+        layers=n_layers,
+        tokens_per_batch=b,
+        hidden=hidden,
+        baseline_bytes=baseline,
+        compressed_bytes=compressed,
+    )

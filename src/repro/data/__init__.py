@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticStream, make_batch_specs
+
+__all__ = ["SyntheticStream", "make_batch_specs"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: FlashAttention-2 forward (causal / sliding-window, GQA).
+
+Online-softmax over kv tiles; grid = (B*H, Lq/bq, Lk/bk) with running
+(max, denom, acc) carried in VMEM scratch across the kv dimension. GQA is
+handled in the BlockSpec index maps: the kv tile for query-head h is head
+``h // group`` — no repeated K/V in HBM.
+
+The paper composes PAMM with FlashAttention (App. D.1); in this framework
+the training path gets flash *memory semantics* via remat
+(models/attention.py) and this kernel is the serving/prefill compute path
+on real TPUs. Oracle: kernels/ref.py::flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, nk: int, causal: bool, window: int,
+            scale: float, lreal: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)      # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)      # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)      # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                              # (bq, bk)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < lreal  # exclude zero-padded keys
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                    # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                 # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True):
+    """q: (B, L, H, dh); k, v: (B, L, KV, dh) -> (B, L, H, dh)."""
+    B, L, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    bq = min(bq, L)
+    bk = min(bk, L)
+    pq = (-L) % bq
+    pdh = (-dh) % 128
+
+    # (B*H, L, dh) layout; kv stays (B*KV, L, dh) and the index map folds GQA
+    qr = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, pdh)))
+    kr = jnp.pad(k, ((0, 0), (0, pq), (0, 0), (0, pdh)))
+    vr = jnp.pad(v, ((0, 0), (0, pq), (0, 0), (0, pdh)))
+    Lp, dhp = L + pq, dh + pdh
+    qr = qr.transpose(0, 2, 1, 3).reshape(B * H, Lp, dhp)
+    kr = kr.transpose(0, 2, 1, 3).reshape(B * KV, Lp, dhp)
+    vr = vr.transpose(0, 2, 1, 3).reshape(B * KV, Lp, dhp)
+
+    nq, nk = Lp // bq, Lp // bk
+    grid = (B * H, nq, nk)
+
+    def kv_index(bh, iq, jk):
+        # query stream bh = b * H + h; kv head = h // G
+        return ((bh // (H * 1)) * KV + (bh % H) // G, jk, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window, scale=scale, lreal=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, dhp), kv_index),
+            pl.BlockSpec((1, bk, dhp), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lp, dhp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dhp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, Lp, dhp).transpose(0, 2, 1, 3)
+    return out[:, :L, :, :dh]

@@ -1,0 +1,50 @@
+"""jit'd wrappers: assemble full PAMM ops from the Pallas kernel cores.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python on
+CPU for validation, per the brief); on a TPU backend the same pallas_call
+compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pamm import PammState
+from repro.kernels import pamm_apply as _apply_k
+from repro.kernels import pamm_compress as _compress_k
+from repro.kernels.flash_attention import flash_attention  # re-export
+
+__all__ = ["pamm_compress", "pamm_apply", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pamm_compress(x, k: int, eps: float, key, *, interpret: bool | None = None) -> PammState:
+    """Kernel-backed equivalent of core.pamm.pamm_compress."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b = x.shape[0]
+    k = min(k, b)
+    idx = jax.random.choice(key, b, shape=(k,), replace=False)
+    c = jnp.take(x, idx, axis=0)
+    cs, assign, norm_a = _compress_k.csim_argmax(x, c, interpret=interpret)
+    norm_c = jnp.take(norm_a, idx)
+    alpha = cs * norm_a / jnp.maximum(jnp.take(norm_c, assign), 1e-20)
+    thresh = 1.0 - float(eps) * float(eps) if math.isfinite(eps) else -jnp.inf
+    keep = cs * cs >= thresh
+    alpha = jnp.where(keep, alpha, 0.0)
+    beta = b / jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+    return PammState(c, alpha, assign, beta.astype(jnp.float32))
+
+
+def pamm_apply(state: PammState, gz, *, interpret: bool | None = None):
+    """Kernel-backed equivalent of core.pamm.pamm_apply."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    k = state.generators.shape[0]
+    btilde = _apply_k.segment_matmul(
+        state.assign, state.alpha, gz, k, interpret=interpret
+    )
+    return state.beta * (state.generators.astype(jnp.float32).T @ btilde)

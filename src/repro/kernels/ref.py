@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These ARE the semantics; the kernels are the TPU-optimized implementations.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pamm import PammState, pamm_apply as _core_apply, pamm_compress as _core_compress
+
+
+def pamm_compress_ref(x, k, eps, key) -> PammState:
+    return _core_compress(x, k, eps, key)
+
+
+def pamm_apply_ref(state: PammState, gz) -> jax.Array:
+    return _core_apply(state, gz)
+
+
+def csim_argmax_ref(x, c):
+    """Oracle of the compress kernel core: (signed cs at argmax|csim|, idx, ||x_i||)."""
+    x32 = x.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    norm_a = jnp.linalg.norm(x32, axis=1)
+    norm_c = jnp.linalg.norm(c32, axis=1)
+    csim = (x32 @ c32.T) / (
+        jnp.maximum(norm_a[:, None], 1e-20) * jnp.maximum(norm_c[None, :], 1e-20)
+    )
+    idx = jnp.argmax(jnp.abs(csim), axis=1).astype(jnp.int32)
+    cs = jnp.take_along_axis(csim, idx[:, None], axis=1)[:, 0]
+    return cs, idx, norm_a
+
+
+def segment_matmul_ref(f, alpha, gz, k):
+    """Oracle of the apply kernel core: Btilde = E^T (alpha * gz)."""
+    bprime = alpha[:, None].astype(jnp.float32) * gz.astype(jnp.float32)
+    return jax.ops.segment_sum(bprime, f, num_segments=k)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Oracle of the flash kernel: q (B,L,H,dh), k/v (B,L,KV,dh)."""
+    B, L, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, L, KV, G, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(L)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask = mask & (pos[:, None] - pos[None, :] < window)
+    if not causal:
+        mask = jnp.ones_like(mask)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, L, H, dh).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Model zoo: composable decoder blocks + staged stack assembly."""
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_caches,
+    init_model,
+    loss_fn,
+    make_run_policy,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_caches",
+    "init_model",
+    "loss_fn",
+    "make_run_policy",
+    "param_specs",
+    "prefill",
+]

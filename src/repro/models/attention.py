@@ -1,0 +1,251 @@
+"""GQA attention: training (chunked, memory-bounded), prefill, and decode.
+
+Covers every attention variant in the assigned architectures:
+  * grouped-query attention with arbitrary H/KV ratio (incl. MQA kv=1),
+  * RoPE (configurable theta), optional per-head qk-norm (qwen3),
+  * optional QKV bias (qwen2),
+  * sliding-window / local attention (h2o-danube, recurrentgemma) with a
+    ring-buffer KV cache so long_500k decode stores only the window,
+  * cross-attention over precomputed image embeddings (llama-3.2-vision)
+    with tanh gating.
+
+The training path never materializes the (L, L) score matrix: it scans over
+query blocks of ``chunk`` rows (FlashAttention-style memory behaviour; the
+Pallas kernel in kernels/flash_attention.py is the TPU-optimized version
+and uses this code path's math as its oracle).
+
+PAMM hooks: the Q/K/V projections run through
+``core.linear.compressed_linear_shared`` — one compressed state per layer
+backs all three weight gradients (paper Fig. 2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import compressed_linear_shared
+from repro.core.policies import CompressionPolicy
+from repro.models.layers import P, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype, *, cross: bool = False, n_kv_eff: int | None = None):
+    """n_kv_eff: KV heads possibly replicated for TP divisibility (DESIGN §5)."""
+    kv = n_kv_eff or cfg.n_kv_heads
+    d, dh, h = cfg.d_model, cfg.head_dim, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, kv * dh, dtype),
+        "wv": dense_init(ks[2], d, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+    specs = {
+        "wq": P(("embed", "heads")),
+        "wk": P(("embed", "heads")),
+        "wv": P(("embed", "heads")),
+        "wo": P(("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * dh,), dtype)
+        params["bk"] = jnp.zeros((kv * dh,), dtype)
+        params["bv"] = jnp.zeros((kv * dh,), dtype)
+        specs["bq"] = P(("heads",))
+        specs["bk"] = P(("heads",))
+        specs["bv"] = P(("heads",))
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((dh,), dtype)
+        params["k_norm"] = jnp.zeros((dh,), dtype)
+        specs["q_norm"] = P((None,))
+        specs["k_norm"] = P((None,))
+    if cross:
+        params["gate_attn"] = jnp.zeros((), dtype)
+        specs["gate_attn"] = P(())
+    return params, specs
+
+
+def _project_qkv(params, x, kv_src, policy: CompressionPolicy, key, cfg, n_kv_eff):
+    """Q from x; K,V from kv_src (== x for self-attn). Shared PAMM state."""
+    dh = cfg.head_dim
+    h = params["wq"].shape[1] // dh
+    kv = params["wk"].shape[1] // dh
+    biases = [params.get("bq"), params.get("bk"), params.get("bv")]
+    if kv_src is x:
+        q, k, v = compressed_linear_shared(
+            x, [params["wq"], params["wk"], params["wv"]], biases, key, policy
+        )
+    else:
+        # cross-attention: queries from text stream, keys/values from images.
+        (q,) = compressed_linear_shared(x, [params["wq"]], [biases[0]], key, policy)
+        k2key = None if key is None else jax.random.fold_in(key, 1)
+        k, v = compressed_linear_shared(
+            kv_src, [params["wk"], params["wv"]], biases[1:], k2key, policy
+        )
+    q = q.reshape(*x.shape[:-1], h, dh)
+    k = k.reshape(*kv_src.shape[:-1], kv, dh)
+    v = v.reshape(*kv_src.shape[:-1], kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# scaled dot product — chunked over query blocks
+# ---------------------------------------------------------------------------
+def sdpa(q, k, v, q_pos, k_pos, *, causal: bool, window: int, chunk: int):
+    """q: (B,Lq,H,dh); k,v: (B,Lk,KV,dh); *_pos: (B, L*) int32 (-1 = invalid slot).
+
+    Returns (B, Lq, H, dh). Memory per scan step: O(B*H*chunk*Lk) scores.
+    """
+    B, Lq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    chunk = min(chunk, Lq)
+    n_blk = (Lq + chunk - 1) // chunk
+    pad = n_blk * chunk - Lq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def one_block(q_blk, qp_blk):
+        qg = q_blk.reshape(B, chunk, KV, G, dh).astype(jnp.float32)
+        scores = jnp.einsum("bqkgd,blkd->bkgql", qg, k32) * scale  # (B,KV,G,chunk,Lk)
+        mask = k_pos[:, None, None, None, :] >= 0
+        if causal:
+            mask = mask & (k_pos[:, None, None, None, :] <= qp_blk[:, None, None, :, None])
+        if window > 0:
+            mask = mask & (
+                qp_blk[:, None, None, :, None] - k_pos[:, None, None, None, :] < window
+            )
+        mask = mask & (qp_blk[:, None, None, :, None] >= 0)
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgql,blkd->bqkgd", probs, v32)
+        return out.reshape(B, chunk, H, dh).astype(q.dtype)
+
+    if n_blk == 1:
+        out = one_block(q, q_pos)
+    else:
+        qs = q.reshape(B, n_blk, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+        ps = q_pos.reshape(B, n_blk, chunk).transpose(1, 0, 2)
+        _, outs = jax.lax.scan(lambda c, xs: (c, one_block(*xs)), None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * chunk, H, dh)
+    return out[:, :Lq]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array         # (B, S, KV, dh) — S = max_len, or window for ring caches
+    v: jax.Array         # (B, S, KV, dh)
+    slot_pos: jax.Array  # (B, S) int32 absolute position per slot; -1 = empty
+    ring: jax.Array      # () bool-as-int32: 1 => ring buffer of size window
+
+
+def init_kv_cache(B: int, S: int, kv: int, dh: int, dtype, ring: bool) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((B, S, kv, dh), dtype),
+        v=jnp.zeros((B, S, kv, dh), dtype),
+        slot_pos=jnp.full((B, S), -1, jnp.int32),
+        ring=jnp.array(1 if ring else 0, jnp.int32),
+    )
+
+
+def cache_insert(cache: KVCache, k_new, v_new, positions) -> KVCache:
+    """Insert Ln new entries at their positions (ring: modulo cache size)."""
+    S = cache.k.shape[1]
+    slots = jnp.where(cache.ring > 0, positions % S, positions)
+    slots = jnp.where(positions >= 0, slots, S)  # invalid -> dropped (mode=drop)
+    bidx = jnp.arange(cache.k.shape[0])[:, None]
+    return cache._replace(
+        k=cache.k.at[bidx, slots].set(k_new.astype(cache.k.dtype), mode="drop"),
+        v=cache.v.at[bidx, slots].set(v_new.astype(cache.v.dtype), mode="drop"),
+        slot_pos=cache.slot_pos.at[bidx, slots].set(positions, mode="drop"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+def attn_train(params, x, positions, cfg, policy, key, *, window: int, chunk: int,
+               flash_sdp: bool = True):
+    """Self-attention over a full sequence (training / prefill math)."""
+    q, k, v = _project_qkv(params, x, x, policy, key, cfg, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    sdp = lambda q_, k_, v_: sdpa(
+        q_, k_, v_, positions, positions, causal=True, window=window, chunk=chunk
+    )
+    if flash_sdp:
+        # FlashAttention memory semantics: save only q/k/v, recompute the
+        # (chunk x L) scores and probabilities during backward.
+        sdp = jax.checkpoint(sdp, prevent_cse=False)
+    out = sdp(q, k, v)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ params["wo"].astype(x.dtype), (k, v)
+
+
+def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int):
+    """One-step decode: x (B, 1, d), positions (B, 1) absolute."""
+    from repro.core.policies import ExactPolicy
+
+    q, k, v = _project_qkv(params, x, x, ExactPolicy(), None, cfg, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache = cache_insert(cache, k, v, positions)
+    out = sdpa(
+        q, cache.k, cache.v, positions, cache.slot_pos,
+        causal=True, window=window, chunk=1,
+    )
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ params["wo"].astype(x.dtype), cache
+
+
+def cross_attn(params, x, image_embeds, cfg, policy, key, *, chunk: int,
+               flash_sdp: bool = True):
+    """Cross-attention (no RoPE, non-causal) with tanh gate. Train/prefill."""
+    q, k, v = _project_qkv(params, x, image_embeds, policy, key, cfg, None)
+    B, Lq = x.shape[0], x.shape[1]
+    Lk = image_embeds.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32), (B, Lq))
+    kpos = jnp.broadcast_to(jnp.arange(Lk, dtype=jnp.int32), (B, Lk))
+    sdp = lambda q_, k_, v_: sdpa(q_, k_, v_, qpos, kpos, causal=False, window=0, chunk=chunk)
+    if flash_sdp:
+        sdp = jax.checkpoint(sdp, prevent_cse=False)
+    out = sdp(q, k, v)
+    out = out.reshape(*x.shape[:-1], -1) @ params["wo"].astype(x.dtype)
+    return jnp.tanh(params["gate_attn"].astype(x.dtype)) * out, (k, v)
+
+
+def cross_attn_decode(params, x, kv_cached, cfg):
+    """Decode-time cross-attention against cached image K/V."""
+    from repro.core.policies import ExactPolicy
+
+    k, v = kv_cached
+    dh = cfg.head_dim
+    h = params["wq"].shape[1] // dh
+    q = (x @ params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(*x.shape[:-1], h, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    B, Lq = x.shape[0], x.shape[1]
+    Lk = k.shape[1]
+    qpos = jnp.zeros((B, Lq), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(Lk, dtype=jnp.int32), (B, Lk))
+    out = sdpa(q, k, v, qpos, kpos, causal=False, window=0, chunk=1)
+    out = out.reshape(*x.shape[:-1], -1) @ params["wo"].astype(x.dtype)
+    return jnp.tanh(params["gate_attn"].astype(x.dtype)) * out

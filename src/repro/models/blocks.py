@@ -1,0 +1,232 @@
+"""Residual block definitions per kind + per-kind cache plumbing.
+
+Each kind implements:
+  init_block(kind, cfg, rcfg, key, dtype)            -> (params, specs)
+  block_train(kind, ...)(params, x, ...)             -> (x, aux)
+  block_prefill(...)                                 -> (x, cache, aux)
+  block_decode(...)(params, x, pos, cache, ...)      -> (x, cache)
+  init_block_cache(kind, cfg, B, max_len, dtype)     -> cache pytree
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import CompressionPolicy, ExactPolicy
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import P, ffn, init_ffn, init_rms_norm, rms_norm
+
+_EXACT = ExactPolicy()
+
+
+def _window_for(kind: str, cfg) -> int:
+    if kind == "swa":
+        return cfg.sliding_window
+    if kind == "latt":
+        return cfg.local_window
+    return 0
+
+
+def policy_for(kind: str, rcfg, policy: CompressionPolicy) -> CompressionPolicy:
+    """Which projections get compressed, per DESIGN.md §4."""
+    if kind in ("attn", "swa", "moe", "latt", "xattn"):
+        return policy
+    if kind == "rec":
+        return policy if rcfg.pamm_on_recurrent else _EXACT
+    if kind == "ssm":
+        return policy if rcfg.pamm_on_ssm_inproj else _EXACT
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_block(kind: str, cfg, key, dtype, *, n_kv_eff: int | None = None,
+               e_pad: int = 0):
+    ks = jax.random.split(key, 4)
+    params: dict = {}
+    specs: dict = {}
+    params["norm1"], specs["norm1"] = init_rms_norm(cfg.d_model, dtype)
+
+    if kind in ("attn", "swa", "latt", "moe"):
+        params["attn"], specs["attn"] = attn_lib.init_attention(
+            ks[0], cfg, dtype, n_kv_eff=n_kv_eff
+        )
+        params["norm2"], specs["norm2"] = init_rms_norm(cfg.d_model, dtype)
+        if kind == "moe":
+            params["ffn"], specs["ffn"] = moe_lib.init_moe(ks[1], cfg, dtype, e_pad=e_pad)
+        else:
+            params["ffn"], specs["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "xattn":
+        params["attn"], specs["attn"] = attn_lib.init_attention(
+            ks[0], cfg, dtype, cross=True, n_kv_eff=n_kv_eff
+        )
+        params["norm2"], specs["norm2"] = init_rms_norm(cfg.d_model, dtype)
+        params["ffn"], specs["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        params["gate_ffn"] = jnp.zeros((), dtype)
+        specs["gate_ffn"] = P(())
+    elif kind == "rec":
+        params["rec"], specs["rec"] = rglru_lib.init_rglru(ks[0], cfg, dtype)
+        params["norm2"], specs["norm2"] = init_rms_norm(cfg.d_model, dtype)
+        params["ffn"], specs["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "ssm":
+        params["ssm"], specs["ssm"] = ssm_lib.init_ssm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+def block_train(kind, cfg, rcfg, policy, params, x, positions, extras, key, aux,
+                *, want_cache: bool = False, max_len: int = 0):
+    """Returns (x, aux, cache_or_None)."""
+    pol = policy_for(kind, rcfg, policy)
+    cache = None
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+
+    if kind in ("attn", "swa", "latt", "moe"):
+        out, (k_roped, v) = attn_lib.attn_train(
+            params["attn"], h, positions, cfg, pol, key,
+            window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
+            flash_sdp=rcfg.flash_sdp,
+        )
+        x = x + out
+        if want_cache:
+            win = _window_for(kind, cfg)
+            size = min(max_len, win) if win else max_len
+            kvc = attn_lib.init_kv_cache(
+                x.shape[0], size, k_roped.shape[2], k_roped.shape[3], x.dtype, bool(win)
+            )
+            cache = attn_lib.cache_insert(kvc, k_roped, v, positions)
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            out2, a = moe_lib.moe_ffn(params["ffn"], h2, cfg,
+                                      gather_dispatch=rcfg.moe_gather_dispatch,
+                                      token_blocks=rcfg.moe_token_blocks)
+            aux = aux + a
+        else:
+            out2 = ffn(params["ffn"], h2)
+        x = x + out2
+
+    elif kind == "xattn":
+        out, (k_img, v_img) = attn_lib.cross_attn(
+            params["attn"], h, extras["image_embeds"], cfg, pol, key,
+            chunk=rcfg.attn_chunk, flash_sdp=rcfg.flash_sdp,
+        )
+        x = x + out
+        if want_cache:
+            cache = (k_img, v_img)
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn(params["ffn"], h2)
+
+    elif kind == "rec":
+        res = rglru_lib.rglru_train(params["rec"], h, cfg, pol, key, return_cache=want_cache)
+        out, cache = res if want_cache else (res, None)
+        x = x + out
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn(params["ffn"], h2)
+
+    elif kind == "ssm":
+        res = ssm_lib.ssm_train(params["ssm"], h, cfg, pol, key, return_cache=want_cache)
+        out, cache = res if want_cache else (res, None)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def block_decode(kind, cfg, rcfg, params, x, positions, cache, extras):
+    """One-step decode. x: (B, 1, d). Returns (x, new_cache)."""
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+
+    if kind in ("attn", "swa", "latt", "moe"):
+        out, cache = attn_lib.attn_decode(
+            params["attn"], h, positions, cache, cfg, window=_window_for(kind, cfg)
+        )
+        x = x + out
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            out2, _ = moe_lib.moe_ffn(params["ffn"], h2, cfg,
+                                      gather_dispatch=rcfg.moe_gather_dispatch,
+                                      token_blocks=rcfg.moe_token_blocks)
+        else:
+            out2 = ffn(params["ffn"], h2)
+        x = x + out2
+
+    elif kind == "xattn":
+        out = attn_lib.cross_attn_decode(params["attn"], h, cache, cfg)
+        x = x + out
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn(params["ffn"], h2)
+
+    elif kind == "rec":
+        out, cache = rglru_lib.rglru_decode(params["rec"], h, cache, cfg)
+        x = x + out
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn(params["ffn"], h2)
+
+    elif kind == "ssm":
+        out, cache = ssm_lib.ssm_decode(params["ssm"], h, cache, cfg)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def block_cache_specs(kind, cfg, *, shard_cache_seq: bool = False):
+    """Logical axis names for the (layer-stacked) decode cache pytree.
+
+    ``shard_cache_seq``: shard the KV-cache sequence dim over the data axis
+    (flash-decoding style) — used for long_500k (global_batch=1) where the
+    batch axis cannot feed 16 data shards.
+    """
+    seq_ax = "batch" if shard_cache_seq else None
+    bat_ax = None if shard_cache_seq else "batch"
+    if kind in ("attn", "swa", "latt", "moe"):
+        return attn_lib.KVCache(
+            k=("layers", bat_ax, seq_ax, "heads", None),
+            v=("layers", bat_ax, seq_ax, "heads", None),
+            slot_pos=("layers", bat_ax, seq_ax),
+            ring=("layers",),
+        )
+    if kind == "xattn":
+        return (
+            ("layers", bat_ax, None, "heads", None),
+            ("layers", bat_ax, None, "heads", None),
+        )
+    if kind == "rec":
+        return rglru_lib.RGLRUCache(
+            h=("layers", bat_ax, "ffn"),
+            conv_state=("layers", bat_ax, None, "ffn"),
+        )
+    if kind == "ssm":
+        return ssm_lib.SSMCache(
+            state=("layers", bat_ax, "heads", None, None),
+            conv_state=("layers", bat_ax, None, "ffn"),
+        )
+    raise ValueError(kind)
+
+
+def init_block_cache(kind, cfg, B: int, max_len: int, dtype, *, n_kv_eff=None):
+    """Zero-initialized cache (used by serve_step input_specs and decoding)."""
+    if kind in ("attn", "swa", "latt", "moe"):
+        win = _window_for(kind, cfg)
+        size = min(max_len, win) if win else max_len
+        kv = n_kv_eff or cfg.n_kv_heads
+        return attn_lib.init_kv_cache(B, size, kv, cfg.head_dim, dtype, bool(win))
+    if kind == "xattn":
+        kv = n_kv_eff or cfg.n_kv_heads
+        return (
+            jnp.zeros((B, cfg.vision_tokens, kv, cfg.head_dim), dtype),
+            jnp.zeros((B, cfg.vision_tokens, kv, cfg.head_dim), dtype),
+        )
+    if kind == "rec":
+        return rglru_lib.init_rglru_cache(cfg, B, dtype)
+    if kind == "ssm":
+        return ssm_lib.init_ssm_cache(cfg, B, dtype)
+    raise ValueError(kind)

@@ -1,0 +1,325 @@
+"""Model assembly: embedding -> staged block stack (lax.scan) -> head.
+
+Public API (all pure functions over plain pytrees):
+
+  init_model(cfg, rcfg, key, n_kv_eff=None)       -> (params, specs)
+  loss_fn(cfg, rcfg, policy, params, batch, key)  -> (loss, metrics)
+  forward(cfg, rcfg, policy, params, batch, key)  -> (hidden, aux)
+  prefill(cfg, rcfg, params, batch, max_len)      -> (logits_last, caches)
+  decode_step(cfg, rcfg, params, tokens, pos, caches, extras) -> (logits, caches)
+
+``batch``: dict with 'tokens' (B, L) int32 (or 'embeds' (B, L, d) when
+cfg.embed_inputs), 'labels', optional 'mask', optional 'image_embeds'
+(B, vision_tokens, d). MusicGen labels are (B, L, n_codebooks).
+
+Stages with repeat > 1 run under ``lax.scan`` over stacked per-layer params
+so 80-layer models lower to compact HLO (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import CompressionPolicy, ExactPolicy, make_policy
+from repro.models import blocks as blk
+from repro.models.layers import P, chunked_cross_entropy, embed_init, init_rms_norm, rms_norm
+
+__all__ = [
+    "init_model", "param_specs", "make_run_policy",
+    "forward", "loss_fn", "prefill", "decode_step", "init_caches",
+]
+
+
+def make_run_policy(rcfg) -> CompressionPolicy:
+    if rcfg.policy_name == "pamm":
+        return make_policy(
+            "pamm", ratio=rcfg.pamm_ratio, eps=rcfg.pamm_eps,
+            use_kernel=rcfg.use_kernel, n_blocks=rcfg.pamm_blocks,
+            k_max=rcfg.pamm_k_max,
+        )
+    if rcfg.policy_name == "uniform_crs":
+        return make_policy("uniform_crs", ratio=rcfg.pamm_ratio)
+    if rcfg.policy_name == "compact":
+        # matched-memory comparison (paper Fig 4a): CompAct stores b*kp
+        # scalars vs the baseline's b*n, so kp/n == the PAMM ratio gives
+        # equal stored bytes.
+        return make_policy("compact", ratio=rcfg.pamm_ratio)
+    return make_policy("none")
+
+
+def _dtype(rcfg):
+    return jnp.dtype(rcfg.compute_dtype), jnp.dtype(rcfg.param_dtype)
+
+
+def _padded_vocab(cfg, rcfg) -> int:
+    """Vocab dim used for embed/head params. Padding to a multiple of the
+    model-axis lane granularity lets odd vocabs (49155, 50280) shard over
+    'model' instead of being replicated (§Perf). Padded logit columns are
+    masked to -inf in the loss; padded embedding rows are never gathered
+    (token ids < vocab_size). n_codebook heads keep their native vocab (it
+    already divides)."""
+    m = getattr(rcfg, "pad_vocab_multiple", 0)
+    if not m or cfg.n_codebooks:
+        return cfg.vocab_size
+    return ((cfg.vocab_size + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_model(cfg, rcfg, key, *, n_kv_eff: int | None = None):
+    _, pdt = _dtype(rcfg)
+    ks = jax.random.split(key, len(cfg.stages) + 3)
+    params: dict = {}
+    specs: dict = {}
+
+    v_pad = _padded_vocab(cfg, rcfg)
+    em = getattr(rcfg, "pad_experts_multiple", 0)
+    e_pad = ((cfg.n_experts + em - 1) // em) * em if (em and cfg.n_experts) else 0
+    if not cfg.embed_inputs:
+        params["embed"] = embed_init(ks[0], v_pad, cfg.d_model, pdt)
+        specs["embed"] = P(("vocab", "embed"))
+
+    stages_p, stages_s = [], []
+    for si, (unit, rep) in enumerate(cfg.stages):
+        unit_p, unit_s = [], []
+        for bi, kind in enumerate(unit):
+            def one(r):
+                return blk.init_block(
+                    kind, cfg, jax.random.fold_in(ks[si + 1], r * 16 + bi), pdt,
+                    n_kv_eff=n_kv_eff, e_pad=e_pad,
+                )
+            ps = [one(r)[0] for r in range(rep)]
+            sp = one(0)[1]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps) if rep > 1 else \
+                jax.tree.map(lambda x: x[None], ps[0])
+            unit_p.append(stacked)
+            unit_s.append(jax.tree.map(lambda s: P(("layers",) + tuple(s)), sp,
+                                       is_leaf=lambda s: isinstance(s, tuple)))
+        stages_p.append(unit_p)
+        stages_s.append(unit_s)
+    params["stages"] = stages_p
+    specs["stages"] = stages_s
+
+    params["final_norm"], specs["final_norm"] = init_rms_norm(cfg.d_model, pdt)
+    n_head_out = v_pad * max(1, cfg.n_codebooks)
+    params["head"] = (
+        jax.random.normal(ks[-1], (cfg.d_model, n_head_out)) * (cfg.d_model ** -0.5)
+    ).astype(pdt)
+    specs["head"] = P(("embed", "vocab"))
+    return params, specs
+
+
+def param_specs(cfg, rcfg, *, n_kv_eff: int | None = None):
+    """(ShapeDtypeStruct tree, spec tree) without allocating parameters."""
+    box = {}
+
+    def f(k):
+        p, s = init_model(cfg, rcfg, k, n_kv_eff=n_kv_eff)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, box["specs"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def _embed(cfg, params, batch, cdt):
+    if cfg.embed_inputs:
+        return batch["embeds"].astype(cdt)
+    return jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+
+
+def _extras(cfg, batch, cdt):
+    ex = {}
+    if cfg.vision_tokens:
+        ex["image_embeds"] = batch["image_embeds"].astype(cdt)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# staged forward (training / scoring)
+# ---------------------------------------------------------------------------
+def forward(cfg, rcfg, policy, params, batch, key):
+    """Returns (hidden (B, L, d), aux_loss)."""
+    cdt, _ = _dtype(rcfg)
+    x = _embed(cfg, params, batch, cdt)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    extras = _extras(cfg, batch, cdt)
+    aux = jnp.float32(0)
+
+    for si, (unit, rep) in enumerate(cfg.stages):
+        unit_params = params["stages"][si]
+        stage_key = jax.random.fold_in(key, si)
+
+        def body(carry, xs):
+            x_c, aux_c = carry
+            bparams, k_r = xs
+            for bi, kind in enumerate(unit):
+                x_c, aux_c, _ = blk.block_train(
+                    kind, cfg, rcfg, policy, bparams[bi], x_c, positions, extras,
+                    jax.random.fold_in(k_r, bi), aux_c,
+                )
+                if rcfg.seq_shard:
+                    # Megatron sequence parallelism: between blocks the
+                    # residual stream is sharded over (batch, seq->model);
+                    # GSPMD inserts the all-gather / reduce-scatter pairs.
+                    from repro.runtime.sharding import maybe_constrain
+
+                    x_c = maybe_constrain(x_c, ("batch", "ffn", None))
+            return (x_c, aux_c), None
+
+        if rcfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif rcfg.remat == "pamm":
+            # Beyond-paper integration: remat everything in the block EXCEPT
+            # the compressed PAMM states (tiny) — the backward re-computes
+            # activations but re-uses the saved generators/coefficients.
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.save_only_these_names("pamm_state"),
+            )
+
+        keys = jax.random.split(stage_key, rep)
+        if rep > 1:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), (unit_params, keys))
+        else:
+            sliced = jax.tree.map(lambda t: t[0], unit_params)
+            (x, aux), _ = body((x, aux), (sliced, keys[0]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(cfg, rcfg, policy, params, batch, key):
+    cdt, _ = _dtype(rcfg)
+    h, aux = forward(cfg, rcfg, policy, params, batch, key)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape[:2], jnp.float32)
+    if cfg.n_codebooks:
+        v = cfg.vocab_size
+        nll = jnp.float32(0)
+        for c in range(cfg.n_codebooks):
+            w_c = params["head"][:, c * v : (c + 1) * v]
+            nll = nll + chunked_cross_entropy(h, w_c, labels[..., c], mask, rcfg.loss_chunk)
+        nll = nll / cfg.n_codebooks
+    else:
+        nll = chunked_cross_entropy(h, params["head"], labels, mask, rcfg.loss_chunk,
+                                    valid_vocab=cfg.vocab_size)
+    moe_coef = 0.01 if cfg.n_experts else 0.0
+    total_layers = max(1, cfg.n_layers)
+    loss = nll + moe_coef * aux / total_layers
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None):
+    cdt, _ = _dtype(rcfg)
+    caches = []
+    for unit, rep in cfg.stages:
+        unit_caches = []
+        for kind in unit:
+            one = blk.init_block_cache(kind, cfg, B, max_len, cdt, n_kv_eff=n_kv_eff)
+            stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None], (rep,) + t.shape), one)
+            unit_caches.append(stacked)
+        caches.append(unit_caches)
+    return caches
+
+
+def cache_logical_specs(cfg, *, shard_cache_seq: bool = False):
+    """Logical spec tree matching ``init_caches`` (for the dry-run)."""
+    specs = []
+    for unit, rep in cfg.stages:
+        specs.append(
+            [blk.block_cache_specs(kind, cfg, shard_cache_seq=shard_cache_seq)
+             for kind in unit]
+        )
+    return specs
+
+
+def prefill(cfg, rcfg, params, batch, max_len: int):
+    """Run the prompt, build caches sized ``max_len``. Returns (logits, caches)."""
+    cdt, _ = _dtype(rcfg)
+    policy = ExactPolicy()
+    x = _embed(cfg, params, batch, cdt)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    extras = _extras(cfg, batch, cdt)
+    aux = jnp.float32(0)
+    key = jax.random.key(0)
+    caches = []
+
+    for si, (unit, rep) in enumerate(cfg.stages):
+        unit_params = params["stages"][si]
+
+        def body2(x_c, bparams):
+            outs = []
+            a = jnp.float32(0)
+            for bi, kind in enumerate(unit):
+                x_c, a, cache = blk.block_train(
+                    kind, cfg, rcfg, policy, bparams[bi], x_c, positions, extras,
+                    key, a, want_cache=True, max_len=max_len,
+                )
+                outs.append(cache)
+            return x_c, tuple(outs)
+
+        if rep > 1:
+            x, stage_caches = jax.lax.scan(body2, x, unit_params)
+            caches.append(list(stage_caches))
+        else:
+            sliced = jax.tree.map(lambda t: t[0], unit_params)
+            x, stage_caches = body2(x, sliced)
+            caches.append([jax.tree.map(lambda t: t[None], c) for c in stage_caches])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:] @ params["head"].astype(cdt)).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(cfg, rcfg, params, tokens, pos, caches, extras_batch=None):
+    """One decode step for the whole batch.
+
+    tokens: (B, 1) int32 (or (B, 1, d) embeds); pos: (B, 1) absolute position.
+    Returns (logits (B, 1, V*), new_caches).
+    """
+    cdt, _ = _dtype(rcfg)
+    if cfg.embed_inputs:
+        x = tokens.astype(cdt)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    extras = extras_batch or {}
+
+    new_caches = []
+    for si, (unit, rep) in enumerate(cfg.stages):
+        unit_params = params["stages"][si]
+        unit_caches = caches[si]
+
+        def body(x_c, xs):
+            bparams, bcaches = xs
+            outs = []
+            for bi, kind in enumerate(unit):
+                x_c, nc = blk.block_decode(
+                    kind, cfg, rcfg, bparams[bi], x_c, pos, bcaches[bi], extras
+                )
+                outs.append(nc)
+            return x_c, tuple(outs)
+
+        if rep > 1:
+            x, stage_caches = jax.lax.scan(body, x, (unit_params, unit_caches))
+            new_caches.append(list(stage_caches))
+        else:
+            sliced_p = jax.tree.map(lambda t: t[0], unit_params)
+            sliced_c = [jax.tree.map(lambda t: t[0], c) for c in unit_caches]
+            x, stage_caches = body(x, (sliced_p, sliced_c))
+            new_caches.append([jax.tree.map(lambda t: t[None], c) for c in stage_caches])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(cdt)).astype(jnp.float32)
+    return logits, new_caches

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence:  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+with a_t = exp(-c · softplus(Λ) · r_t), r_t = σ(W_a x_t), i_t = σ(W_x x_t),
+c = 8. Training/prefill uses ``lax.associative_scan`` over time (log-depth,
+parallel — the TPU-friendly formulation of the paper's linear recurrence);
+decode is the one-step update.
+
+The block is the Griffin "recurrent" temporal-mixing layer: a gated linear
+unit whose main branch is conv(1d, width 4) -> RG-LRU, multiplied by a
+GeLU side branch, then projected back to d_model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import compressed_linear
+from repro.core.policies import CompressionPolicy, ExactPolicy
+from repro.models.layers import P, causal_depthwise_conv, dense_init
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array           # (B, W) recurrent state (f32)
+    conv_state: jax.Array  # (B, conv_width-1, W)
+
+
+def init_rglru(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin app. A)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))
+    params = {
+        "w_y": dense_init(ks[1], d, w, dtype),       # GeLU side branch
+        "w_x": dense_init(ks[2], d, w, dtype),       # recurrent branch input
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w)) * 0.2).astype(dtype),
+        "w_a": dense_init(ks[4], w, w, dtype),       # recurrence gate
+        "w_i": dense_init(ks[5], w, w, dtype),       # input gate
+        "lambda": lam.astype(jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+    specs = {
+        "w_y": P(("embed", "ffn")),
+        "w_x": P(("embed", "ffn")),
+        "conv_w": P((None, "ffn")),
+        "w_a": P(("ffn", None)),
+        "w_i": P(("ffn", None)),
+        "lambda": P((None,)),
+        "out": P(("ffn", "embed")),
+    }
+    return params, specs
+
+
+def _gates(params, xb):
+    r = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xb.astype(jnp.float32) @ params["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r     # <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_train(params, x, cfg, policy: CompressionPolicy, key, *, return_cache=False):
+    """x: (B, L, d_model)."""
+    pol = policy if getattr(policy, "name", "none") != "none" else ExactPolicy()
+    y_side = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    xb = compressed_linear(x, params["w_x"], None, key, pol)
+    xb, conv_state = causal_depthwise_conv(xb, params["conv_w"])
+    a, b = _gates(params, xb)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan: (a2,b2)∘(a1,b1) = (a1a2, a2 b1 + b2)
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * y_side) @ params["out"].astype(x.dtype)
+    if return_cache:
+        return out, RGLRUCache(h=h[:, -1], conv_state=conv_state)
+    return out
+
+
+def init_rglru_cache(cfg, B: int, dtype) -> RGLRUCache:
+    return RGLRUCache(
+        h=jnp.zeros((B, cfg.lru_width), jnp.float32),
+        conv_state=jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), dtype),
+    )
+
+
+def rglru_decode(params, x, cache: RGLRUCache, cfg):
+    """One token: x (B, 1, d_model)."""
+    y_side = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    xb = x @ params["w_x"].astype(x.dtype)
+    xb, conv_state = causal_depthwise_conv(xb, params["conv_w"], cache.conv_state)
+    a, b = _gates(params, xb)
+    h = a[:, 0] * cache.h + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * y_side) @ params["out"].astype(x.dtype)
+    return out, RGLRUCache(h=h, conv_state=conv_state)

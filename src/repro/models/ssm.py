@@ -1,0 +1,188 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training uses the chunked SSD algorithm: one ``lax.scan`` over sequence
+chunks carrying the inter-chunk SSM state (B, H, P, N); each step does the
+intra-chunk quadratic part (chunk x chunk decay-masked attention-like
+contraction, MXU-friendly) plus the low-rank state pass-through. Decode is
+the O(1)-per-token recurrence h <- h*exp(dt·A) + dt·B⊗x.
+
+Attention-free: there are no Q/K/V projections, so PAMM is *inapplicable*
+by default (DESIGN.md §4). The optional ``pamm_on_ssm_inproj`` run flag
+extends PAMM to the in-projection (the analogous Xᵀ∇Z memory hog).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import compressed_linear
+from repro.core.policies import CompressionPolicy, ExactPolicy
+from repro.models.layers import P, causal_depthwise_conv, dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N) SSM state
+    conv_state: jax.Array  # (B, W-1, conv_dim)
+
+
+def _dims(cfg):
+    din = cfg.ssm_d_inner
+    nh = cfg.ssm_nheads
+    ng, st = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = din + 2 * ng * st
+    d_in_proj = 2 * din + 2 * ng * st + nh
+    return din, nh, ng, st, conv_dim, d_in_proj
+
+
+def init_ssm(key, cfg, dtype):
+    din, nh, ng, st, conv_dim, d_in_proj = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) * 0.2).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "out_norm": jnp.zeros((din,), dtype),
+        "out_proj": dense_init(ks[2], din, cfg.d_model, dtype),
+    }
+    specs = {
+        "in_proj": P(("embed", "ffn")),
+        "conv_w": P((None, "ffn")),
+        "a_log": P((None,)),
+        "d_skip": P((None,)),
+        "dt_bias": P((None,)),
+        "out_norm": P(("ffn",)),
+        "out_proj": P(("ffn", "embed")),
+    }
+    return params, specs
+
+
+def _split_in_proj(cfg, zxbcdt):
+    din, nh, ng, st, conv_dim, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [din, din + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a, b, c, d_skip, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,L,H,Pd); dt: (B,L,H) (post-softplus); a: (H,) negative;
+    b, c: (B,L,G,N). Returns (y, final_state (B,H,Pd,N)).
+    """
+    B, L, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    nchunk = (L + chunk - 1) // chunk
+    pad = nchunk * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    Q = chunk
+    xs = x.reshape(B, nchunk, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(B, nchunk, Q, H).transpose(1, 0, 2, 3)
+    bs = b.reshape(B, nchunk, Q, G, N).transpose(1, 0, 2, 3, 4)
+    cs = c.reshape(B, nchunk, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def body(state, inputs):
+        xq, dtq, bq, cq = inputs                      # (B,Q,H,P), (B,Q,H), (B,Q,G,N)x2
+        da = dtq.astype(jnp.float32) * a              # (B,Q,H) negative increments
+        cum = jnp.cumsum(da, axis=1)                  # inclusive cumsum within chunk
+        # intra-chunk: decay(q,s) = exp(cum_q - cum_s) for s <= q
+        diff = cum[:, :, None, :] - cum[:, None, :, :]           # (B,Q,S,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        decay = jnp.where(mask, jnp.exp(diff), 0.0)
+        bq_h = jnp.repeat(bq, rep, axis=2).astype(jnp.float32)   # (B,Q,H,N)
+        cq_h = jnp.repeat(cq, rep, axis=2).astype(jnp.float32)
+        cb = jnp.einsum("bqhn,bshn->bqsh", cq_h, bq_h)           # (B,Q,S,H)
+        w = cb * decay * dtq[:, None, :, :].astype(jnp.float32)  # weight on x_s
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, xq.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum(
+            "bqhn,bhpn->bqhp", cq_h * jnp.exp(cum)[..., None], state
+        )
+        # new state: S' = S*exp(cum_last) + sum_s exp(cum_last - cum_s) dt_s B_s x_s
+        seg = jnp.exp(cum[:, -1:, :] - cum)                      # (B,Q,H)
+        contrib = jnp.einsum(
+            "bqh,bqhn,bqhp->bhpn",
+            seg * dtq.astype(jnp.float32), bq_h, xq.astype(jnp.float32),
+        )
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
+        y = y_intra + y_inter + d_skip[None, None, :, None] * x_f32(xq)
+        return state, y.astype(x.dtype)
+
+    def x_f32(v):
+        return v.astype(jnp.float32)
+
+    final_state, ys = jax.lax.scan(body, init_state, (xs, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * Q, H, Pd)[:, :L]
+    return y, final_state
+
+
+def ssm_train(params, x, cfg, policy: CompressionPolicy, key, *, return_cache=False):
+    """x: (B, L, d_model) -> (B, L, d_model). Full-sequence training/prefill."""
+    din, nh, ng, st, conv_dim, _ = _dims(cfg)
+    B, L, _ = x.shape
+    pol = policy if getattr(policy, "name", "none") != "none" else ExactPolicy()
+    zxbcdt = compressed_linear(x, params["in_proj"], None, key, pol)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_state = causal_depthwise_conv(xbc, params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [din, din + ng * st], axis=-1)
+    xh = xin.reshape(B, L, nh, cfg.ssm_headdim)
+    bmat = bmat.reshape(B, L, ng, st)
+    cmat = cmat.reshape(B, L, ng, st)
+    a = -jnp.exp(params["a_log"])
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, state = _ssd_chunked(xh, dt_full, a, bmat, cmat, params["d_skip"], cfg.ssm_chunk)
+    y = y.reshape(B, L, din)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    if return_cache:
+        return out, SSMCache(state=state, conv_state=conv_state)
+    return out
+
+
+def init_ssm_cache(cfg, B: int, dtype) -> SSMCache:
+    din, nh, ng, st, conv_dim, _ = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((B, nh, cfg.ssm_headdim, st), jnp.float32),
+        conv_state=jnp.zeros((B, cfg.conv_width - 1, conv_dim), dtype),
+    )
+
+
+def ssm_decode(params, x, cache: SSMCache, cfg):
+    """One token: x (B, 1, d_model)."""
+    din, nh, ng, st, conv_dim, _ = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, conv_state = causal_depthwise_conv(xbc, params["conv_w"], cache.conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [din, din + ng * st], axis=-1)
+    xh = xin.reshape(B, nh, cfg.ssm_headdim).astype(jnp.float32)
+    bmat = bmat.reshape(B, ng, st).astype(jnp.float32)
+    cmat = cmat.reshape(B, ng, st).astype(jnp.float32)
+    rep = nh // ng
+    b_h = jnp.repeat(bmat, rep, axis=1)   # (B, H, N)
+    c_h = jnp.repeat(cmat, rep, axis=1)
+    a = -jnp.exp(params["a_log"])
+    dt1 = jax.nn.softplus(dt.reshape(B, nh).astype(jnp.float32) + params["dt_bias"])
+    decay = jnp.exp(dt1 * a)                                        # (B, H)
+    state = cache.state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt1, b_h, xh
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", c_h, state) + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, SSMCache(state=state, conv_state=conv_state)

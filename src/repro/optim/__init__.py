@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    OptState,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adafactor_init",
+    "adafactor_update",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "make_optimizer",
+    "warmup_cosine",
+]

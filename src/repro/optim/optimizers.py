@@ -1,0 +1,153 @@
+"""Optimizers from scratch (no optax in this environment).
+
+* AdamW with decoupled weight decay, global-norm clipping, and **per-path
+  learning-rate groups**: the paper (App. D) trains PAMM-wrapped weights
+  (W_Q/W_K/W_V) at a reduced rate alpha*eta for stability — we match that
+  by path-matching ``wq|wk|wv`` leaves.
+* Adafactor (factored second moments) for models whose Adam state cannot
+  fit the mesh (kimi-k2 1T; see DESIGN.md §8) — state ~= params instead of
+  2x params.
+
+States are plain pytrees so ZeRO-1 sharding (runtime/sharding.py) can lay
+them out over the data axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAMM_WEIGHT_KEYS = ("wq", "wk", "wv")
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any          # first moment (AdamW) or row stats (Adafactor)
+    v: Any          # second moment / col stats
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), gn
+
+
+def _path_lr_scale(path, pamm_scale: float) -> float:
+    names = {getattr(p, "key", getattr(p, "name", None)) for p in path}
+    return pamm_scale if names & set(PAMM_WEIGHT_KEYS) else 1.0
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params, *, moment_dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads, state: OptState, params, lr, *,
+    b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, pamm_lr_scale=1.0,
+):
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    grads_p = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree.structure(grads)
+    scales = [_path_lr_scale(p, pamm_lr_scale) for p, _ in grads_p]
+    scales = jax.tree.unflatten(treedef, scales)
+
+    def upd(g, m, v, p, s):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * g32 * g32
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * s * delta
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params, scales)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored v, no first moment
+# ---------------------------------------------------------------------------
+def adafactor_init(params) -> OptState:
+    def rows(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(rows, params),
+        v=jax.tree.map(cols, params),
+    )
+
+
+def adafactor_update(
+    grads, state: OptState, params, lr, *,
+    decay=0.8, eps=1e-30, clip_thresh=1.0, weight_decay=0.0, pamm_lr_scale=1.0,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    grads_p = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree.structure(grads)
+    scales = [_path_lr_scale(p, pamm_lr_scale) for p, _ in grads_p]
+    scales = jax.tree.unflatten(treedef, scales)
+
+    def upd(g, r, c, p, s):
+        g32 = g.astype(jnp.float32)
+        sq = g32 * g32 + eps
+        if g.ndim >= 2:
+            r2 = beta * r + (1 - beta) * jnp.mean(sq, axis=-1)
+            c2 = beta * c + (1 - beta) * jnp.mean(sq, axis=-2)
+            rmean = jnp.mean(r2, axis=-1, keepdims=True)
+            vhat = (r2 / jnp.maximum(rmean, eps))[..., None] * c2[..., None, :]
+        else:
+            r2 = beta * r + (1 - beta) * sq
+            c2 = c
+            vhat = r2
+        u = g32 / jnp.sqrt(vhat + eps)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_thresh)
+        p2 = p.astype(jnp.float32) - lr * s * (u + weight_decay * p.astype(jnp.float32))
+        return p2.astype(p.dtype), r2, c2
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params, scales)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_c = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_r, v=new_c)
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

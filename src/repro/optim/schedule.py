@@ -1,0 +1,15 @@
+"""LR schedule: linear warmup over the first warmup_frac of steps, then
+cosine decay to final_frac of the base rate (paper App. D)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, total_steps: int, base_lr: float,
+                  warmup_frac: float = 0.1, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warmup = jnp.maximum(1.0, total_steps * warmup_frac)
+    warm_lr = base_lr * step / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup), 0.0, 1.0)
+    cos_lr = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm_lr, cos_lr)

@@ -1,0 +1,3 @@
+from repro.runtime import fault, grad_compress, sharding
+
+__all__ = ["fault", "grad_compress", "sharding"]

@@ -1,0 +1,123 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+On a real fleet, failures arrive as hardware errors / preemptions that kill
+a host; the recovery contract is: (1) all state lives in checkpoints + the
+deterministic data pipeline, (2) the supervisor restarts the step loop from
+the last published checkpoint (possibly on a different mesh — elastic
+restore re-shards on load). This module implements that contract, with a
+failure-injection hook so tests can exercise it on CPU.
+
+Straggler mitigation: a per-step watchdog tracks a robust running median of
+step times; steps slower than ``threshold x median`` are flagged. The
+supervisor's response is pluggable — the default records the event and (in
+a multi-slice deployment) would re-dispatch the slice; here it feeds the
+metrics used by tests and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+from repro.checkpoint import checkpointer as ckpt
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 3.0
+    window: int = 64
+    _times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=64))
+    slow_steps: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        """Record a step; returns True if it was a straggler."""
+        med = self.median()
+        self._times.append(duration_s)
+        if med is not None and duration_s > self.threshold * med:
+            self.slow_steps.append((step, duration_s, med))
+            return True
+        return False
+
+    def median(self):
+        if len(self._times) < 8:
+            return None
+        xs = sorted(self._times)
+        return xs[len(xs) // 2]
+
+
+class FaultInjector:
+    """Deterministic failure schedule for tests: fail at given steps once."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.pending = set(fail_at)
+
+    def maybe_fail(self, step: int):
+        if step in self.pending:
+            self.pending.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    restarts: int = 0
+    completed_steps: int = 0
+    straggler_events: int = 0
+
+
+def run_supervised(
+    *,
+    total_steps: int,
+    step_fn: Callable[[int], dict],
+    state_provider: Callable[[], object],
+    state_restorer: Callable[[object, int], None],
+    ckpt_root: str,
+    ckpt_every: int = 50,
+    keep: int = 3,
+    max_restarts: int = 8,
+    watchdog: StragglerWatchdog | None = None,
+    injector: FaultInjector | None = None,
+) -> SupervisorReport:
+    """Checkpoint/restart step-loop supervisor.
+
+    ``step_fn(step)`` runs one training step and returns metrics.
+    ``state_provider()`` returns the checkpointable state pytree;
+    ``state_restorer(tree, step)`` installs a restored state.
+    """
+    manager = ckpt.CheckpointManager(ckpt_root, keep=keep)
+    watchdog = watchdog or StragglerWatchdog()
+    report = SupervisorReport()
+
+    start = 0
+    latest = manager.latest_step()
+    if latest is not None:
+        tree, step = ckpt.load(ckpt_root, state_provider(), step=latest)
+        state_restorer(tree, step)
+        start = step
+
+    step = start
+    while step < total_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            t0 = time.monotonic()
+            step_fn(step)
+            if watchdog.observe(step, time.monotonic() - t0):
+                report.straggler_events += 1
+            step += 1
+            report.completed_steps += 1
+            if step % ckpt_every == 0 or step == total_steps:
+                manager.save_sync(step, state_provider())
+        except Exception:
+            report.restarts += 1
+            if report.restarts > max_restarts:
+                raise
+            latest = manager.latest_step()
+            if latest is None:
+                step = 0  # no checkpoint yet: restart from scratch
+                continue
+            tree, ckstep = ckpt.load(ckpt_root, state_provider(), step=latest)
+            state_restorer(tree, ckstep)
+            step = ckstep
+    manager.wait()
+    return report

@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs.
+
+Rules (DESIGN.md §5):
+  batch   -> ('pod', 'data')   activations' leading batch axis (DP)
+  heads   -> 'model'           attention head projections (TP)
+  ffn     -> 'model'           FFN hidden / ssm inner / lru width (TP)
+  experts -> 'model'           MoE expert axis (EP)
+  vocab   -> 'model'           embedding + lm-head vocab (vocab parallelism)
+  embed   -> None              d_model replicated
+  layers  -> None              stacked-layer leading axis
+
+ZeRO-1 (``zero1_specs``): optimizer moments take the param spec PLUS the
+data axis on the first shardable unsharded dimension, so XLA lowers the
+update into reduce-scatter(grads) + shard-local update + all-gather(params)
+— optimizer state per chip shrinks by |data| without a hand-written wrapper.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": None,
+    "layers": None,
+    None: None,
+}
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def logical_to_pspec(logical: tuple, mesh: Mesh, rules=None) -> PS:
+    rules = rules or DEFAULT_RULES
+    axes = _mesh_axes(mesh)
+    out = []
+    for name in logical:
+        rule = rules.get(name)
+        if rule is None:
+            out.append(None)
+        else:
+            picked = tuple(a for a in rule if a in axes)
+            out.append(picked if len(picked) > 1 else (picked[0] if picked else None))
+    return PS(*out)
+
+
+def spec_tree_to_shardings(spec_tree, mesh: Mesh, rules=None):
+    """Map a tree of logical tuples to NamedShardings."""
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, (str, type(None))) for x in s
+    )
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s, mesh, rules)),
+        spec_tree, is_leaf=is_leaf,
+    )
+
+
+def validate_divisibility(shapes_tree, spec_tree, mesh: Mesh, rules=None):
+    """Return a list of (path, shape, pspec) cells where sharding is uneven."""
+    rules = rules or DEFAULT_RULES
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, (str, type(None))) for x in s
+    )
+    bad = []
+    flat_shapes = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+    flat_specs = jax.tree.flatten(spec_tree, is_leaf=is_leaf)[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for (path, shp), spec in zip(flat_shapes, flat_specs):
+        ps = logical_to_pspec(spec, mesh, rules)
+        for dim, entry in zip(shp.shape, tuple(ps) + (None,) * (len(shp.shape) - len(tuple(ps)))):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[a] for a in names]))
+            if dim % total:
+                bad.append((jax.tree_util.keystr(path), shp.shape, ps))
+                break
+    return bad
+
+
+def _spec_axes(spec) -> set[str]:
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    return used
+
+
+def zero1_specs(param_pspec_tree, param_shapes_tree, mesh: Mesh, *, axis: str = "data"):
+    """Optimizer-moment pspecs: param pspec + ``axis`` on a free dimension.
+
+    Skips params that already consume ``axis`` (e.g. FSDP-sharded embed dim)
+    — a mesh axis can appear at most once in a PartitionSpec.
+    """
+    if axis not in mesh.axis_names:
+        return param_pspec_tree
+    dsize = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def one(ps: NamedSharding, shp):
+        spec = list(tuple(ps.spec) + (None,) * (len(shp.shape) - len(tuple(ps.spec))))
+        if axis in _spec_axes(spec):
+            return ps
+        for i, (dim, entry) in enumerate(zip(shp.shape, spec)):
+            if entry is None and dim % dsize == 0 and dim >= dsize:
+                spec[i] = axis
+                return NamedSharding(mesh, PS(*spec))
+        return ps  # no shardable free dim -> keep replicated over data
+
+    return jax.tree.map(one, param_pspec_tree, param_shapes_tree)
+
+
+def sanitize_shardings(sh_tree, shapes_tree, mesh: Mesh):
+    """Drop sharding on any dimension the mesh axes do not divide evenly.
+
+    Catch-all that keeps odd dimensions (vocab 49155, 24 MHA heads, ...)
+    runnable by replicating just that dimension; the cells affected are
+    reported in EXPERIMENTS.md §Dry-run as replication fallbacks.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(ns: NamedSharding, shp):
+        spec = list(tuple(ns.spec) + (None,) * (len(shp.shape) - len(tuple(ns.spec))))
+        changed = False
+        for i, (dim, entry) in enumerate(zip(shp.shape, spec)):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in names:
+                total *= sizes[a]
+            if dim % total:
+                spec[i] = None
+                changed = True
+        return NamedSharding(mesh, PS(*spec)) if changed else ns
+
+    return jax.tree.map(fix, sh_tree, shapes_tree)
+
+
+def opt_state_shardings(opt_shapes, param_sh, param_shapes, mesh: Mesh, *,
+                        optimizer: str = "adamw", zero1: bool = True):
+    """Shardings for an OptState(step, m, v).
+
+    AdamW: moments mirror the param shardings, plus ZeRO-1 (data axis on a
+    free dim). Adafactor: factored stats inherit the param spec minus the
+    reduced dim (rows: drop last; cols: drop second-to-last) — they are tiny
+    so no ZeRO pass is applied.
+    """
+    if optimizer == "adamw":
+        m_sh = zero1_specs(param_sh, opt_shapes.m, mesh) if zero1 else param_sh
+        v_sh = zero1_specs(param_sh, opt_shapes.v, mesh) if zero1 else param_sh
+        return type(opt_shapes)(step=replicated(mesh), m=m_sh, v=v_sh)
+
+    def rows_spec(ps: NamedSharding, pshape):
+        spec = tuple(ps.spec) + (None,) * (len(pshape.shape) - len(tuple(ps.spec)))
+        if len(pshape.shape) >= 2:
+            return NamedSharding(mesh, PS(*spec[:-1]))
+        return NamedSharding(mesh, PS(*spec))
+
+    def cols_spec(ps: NamedSharding, pshape):
+        spec = tuple(ps.spec) + (None,) * (len(pshape.shape) - len(tuple(ps.spec)))
+        if len(pshape.shape) >= 2:
+            return NamedSharding(mesh, PS(*(spec[:-2] + spec[-1:])))
+        return replicated(mesh)
+
+    m_sh = jax.tree.map(rows_spec, param_sh, param_shapes)
+    v_sh = jax.tree.map(cols_spec, param_sh, param_shapes)
+    return type(opt_shapes)(step=replicated(mesh), m=m_sh, v=v_sh)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, rules=None) -> dict:
+    """Shard every input's leading (batch) axis over ('pod','data')."""
+    rules = rules or DEFAULT_RULES
+    axes = _mesh_axes(mesh)
+    picked = tuple(a for a in ("pod", "data") if a in axes)
+    ps = PS(picked if len(picked) > 1 else picked[0] if picked else None)
+    return {k: NamedSharding(mesh, ps) for k in batch_specs}
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())
+
+
+def maybe_constrain(x, logical: tuple):
+    """with_sharding_constraint using whatever mesh is in context (no-op
+    outside a mesh context — keeps model code mesh-agnostic for CPU tests)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return x
+    axes = set(am.axis_names)
+    spec = []
+    for name in logical:
+        rule = DEFAULT_RULES.get(name)
+        if rule is None:
+            spec.append(None)
+        else:
+            picked = tuple(a for a in rule if a in axes)
+            spec.append(picked if len(picked) > 1 else (picked[0] if picked else None))
+    return jax.lax.with_sharding_constraint(x, PS(*spec))

@@ -1,0 +1,10 @@
+from repro.train.train_step import TrainState, make_train_step, init_train_state
+from repro.train.serve_step import make_decode_step, make_prefill
+
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "make_decode_step",
+    "make_prefill",
+]

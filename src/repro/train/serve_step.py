@@ -1,0 +1,47 @@
+"""Serving entry points: prefill and single-token decode step.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower ``decode_step`` (one new
+token against a KV/recurrent cache of seq_len), per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as _decode
+from repro.models import prefill as _prefill
+
+
+def make_prefill(cfg, rcfg, *, max_len: int):
+    def prefill_fn(params, batch):
+        return _prefill(cfg, rcfg, params, batch, max_len)
+
+    return prefill_fn
+
+
+def make_decode_step(cfg, rcfg):
+    def step_fn(params, tokens, pos, caches, extras=None):
+        return _decode(cfg, rcfg, params, tokens, pos, caches, extras)
+
+    return step_fn
+
+
+def greedy_decode(cfg, rcfg, params, batch, *, steps: int, max_len: int):
+    """Simple batched greedy loop (example/serving driver use)."""
+    logits, caches = _prefill(cfg, rcfg, params, batch, max_len)
+    B = logits.shape[0]
+    if cfg.embed_inputs:
+        raise NotImplementedError("greedy loop needs a token frontend")
+    prompt_len = batch["tokens"].shape[1]
+    step_fn = jax.jit(make_decode_step(cfg, rcfg))
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    extras = {}
+    if cfg.vision_tokens:
+        extras["image_embeds"] = batch["image_embeds"]
+    for i in range(steps - 1):
+        pos = jnp.full((B, 1), prompt_len + i, jnp.int32)
+        logits, caches = step_fn(params, tok, pos, caches, extras)
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

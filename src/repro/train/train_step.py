@@ -1,0 +1,94 @@
+"""Train-step factory: loss -> grads -> clip -> schedule -> optimizer.
+
+The returned ``train_step(state, batch, step)`` is a pure function ready for
+``jax.jit`` with in/out shardings from runtime/sharding.py. PRNG for PAMM's
+per-step generator sampling is ``fold_in(seed_key, step)`` — deterministic,
+checkpoint-free, and identical after an elastic restart (paper App. F notes
+per-step sampling; we reproduce it without host RNG state).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn, make_run_policy
+from repro.optim import make_optimizer, warmup_cosine
+from repro.optim.optimizers import clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def init_train_state(cfg, rcfg, key, *, n_kv_eff=None):
+    from repro.models import init_model
+
+    params, specs = init_model(cfg, rcfg, key, n_kv_eff=n_kv_eff)
+    opt_init, _ = make_optimizer(rcfg.optimizer)
+    return TrainState(params=params, opt=opt_init(params)), specs
+
+
+def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
+    policy = make_run_policy(rcfg)
+    _, opt_update = make_optimizer(rcfg.optimizer)
+    seed_key = jax.random.key(rcfg.seed)
+
+    def train_step(state: TrainState, batch: dict, step: jax.Array):
+        key = jax.random.fold_in(seed_key, step)
+        accum = max(1, rcfg.grad_accum)
+        if accum > 1:
+            # Microbatch gradient accumulation: peak activation memory drops
+            # ~accum-fold; grads averaged in f32. PAMM compresses each
+            # microbatch independently (same semantics as smaller DDP shards).
+            def micro(b_idx_key):
+                mb, mkey = b_idx_key
+                return jax.value_and_grad(
+                    lambda p: loss_fn(cfg, rcfg, policy, p, mb, mkey), has_aux=True
+                )(state.params)
+
+            micro_batches = jax.tree.map(
+                lambda t: t.reshape(accum, t.shape[0] // accum, *t.shape[1:]), batch
+            )
+            mkeys = jax.random.split(key, accum)
+
+            def body(carry, xs):
+                (l_acc, g_acc, m_acc) = carry
+                (loss_i, metrics_i), grads_i = micro(xs)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum, g_acc, grads_i
+                )
+                m_acc = jax.tree.map(lambda a, v: a + v / accum, m_acc, metrics_i)
+                return (l_acc + loss_i / accum, g_acc, m_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            zero_m = {"nll": jnp.float32(0), "aux": jnp.float32(0)}
+            (loss, grads32, metrics), _ = jax.lax.scan(
+                body, (jnp.float32(0), zero_g, zero_m), (micro_batches, mkeys)
+            )
+            grads = jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads32, state.params
+            )
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, rcfg, policy, p, batch, key), has_aux=True
+            )(state.params)
+        grads, gnorm = clip_by_global_norm(grads, rcfg.grad_clip)
+        lr = warmup_cosine(step, total_steps, rcfg.lr, rcfg.warmup_frac)
+        new_params, new_opt = opt_update(
+            grads, state.opt, state.params, lr,
+            weight_decay=rcfg.weight_decay, pamm_lr_scale=rcfg.pamm_lr_scale,
+        )
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "nll": metrics["nll"].astype(jnp.float32),
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return TrainState(params=new_params, opt=new_opt), out_metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single CPU device (the 512-device forcing is ONLY
+# for the dry-run launcher, per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

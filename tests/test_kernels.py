@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pamm_apply import segment_matmul
+from repro.kernels.pamm_compress import csim_argmax
+
+
+@pytest.mark.parametrize("b,n,k", [
+    (64, 16, 4), (512, 64, 16), (300, 200, 7), (1024, 512, 128), (100, 33, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_csim_argmax_sweep(b, n, k, dtype):
+    x = jax.random.normal(jax.random.key(1), (b, n), dtype)
+    idx = jax.random.choice(jax.random.key(2), b, shape=(k,), replace=False)
+    c = x[idx]
+    cs, f, na = csim_argmax(x, c)
+    cs_r, f_r, na_r = ref.csim_argmax_ref(x, c)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.abs(np.asarray(cs)), np.abs(np.asarray(cs_r)), atol=tol)
+    np.testing.assert_allclose(np.asarray(na), np.asarray(na_r), rtol=tol, atol=tol)
+    assert f.dtype == jnp.int32
+    assert int(jnp.max(f)) < k
+
+
+@pytest.mark.parametrize("b,m,k", [
+    (64, 16, 4), (512, 48, 16), (300, 200, 7), (2048, 1024, 128), (16, 8, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_matmul_sweep(b, m, k, dtype):
+    f = jax.random.randint(jax.random.key(3), (b,), 0, k).astype(jnp.int32)
+    alpha = jax.random.normal(jax.random.key(4), (b,))
+    gz = jax.random.normal(jax.random.key(5), (b, m), dtype)
+    mine = segment_matmul(f, alpha, gz, k)
+    oracle = ref.segment_matmul_ref(f, alpha, gz, k)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(mine), np.asarray(oracle), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("eps", [math.inf, 1.0, 0.5])
+def test_kernel_pamm_end_to_end(eps):
+    """ops.pamm_* (kernel path) == core.pamm (jnp path), same key."""
+    x = jax.random.normal(jax.random.key(6), (512, 128))
+    gz = jax.random.normal(jax.random.key(7), (512, 96))
+    st_k = ops.pamm_compress(x, 32, eps, jax.random.key(8))
+    st_r = ref.pamm_compress_ref(x, 32, eps, jax.random.key(8))
+    o_k = ops.pamm_apply(st_k, gz)
+    o_r = ref.pamm_apply_ref(st_r, gz)
+    denom = float(jnp.linalg.norm(o_r)) or 1.0
+    assert float(jnp.linalg.norm(o_k - o_r)) / denom < 1e-3
+
+
+@pytest.mark.parametrize("B,L,H,KV,dh,causal,window", [
+    (2, 128, 4, 2, 64, True, 0),
+    (1, 256, 4, 1, 32, True, 64),     # MQA + sliding window
+    (2, 128, 4, 4, 80, False, 0),     # MHA, non-causal, non-128 head dim
+    (1, 192, 8, 2, 128, True, 0),     # L not a multiple of the block
+    (1, 64, 2, 2, 120, True, 16),     # danube head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, L, H, KV, dh, causal, window, dtype):
+    q = jax.random.normal(jax.random.key(9), (B, L, H, dh), dtype)
+    k = jax.random.normal(jax.random.key(10), (B, L, KV, dh), dtype)
+    v = jax.random.normal(jax.random.key(11), (B, L, KV, dh), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window)
+    o_r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_r, np.float32), atol=tol
+    )
+
+
+def test_flash_matches_model_sdpa():
+    """Kernel agrees with the model's chunked sdpa (the training path)."""
+    from repro.models.attention import sdpa
+
+    B, L, H, KV, dh = 2, 96, 4, 2, 64
+    q = jax.random.normal(jax.random.key(12), (B, L, H, dh))
+    k = jax.random.normal(jax.random.key(13), (B, L, KV, dh))
+    v = jax.random.normal(jax.random.key(14), (B, L, KV, dh))
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    o_model = sdpa(q, k, v, pos, pos, causal=True, window=0, chunk=32)
+    o_kernel = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_kernel), atol=2e-5)

@@ -1,0 +1,120 @@
+"""Tests of the compressed-linear custom_vjp (paper Alg. 2/3 semantics)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PammPolicy, make_policy
+from repro.core.linear import compressed_linear, compressed_linear_shared
+
+
+def _data(key, b=256, n=32, m=24):
+    ks = jax.random.split(key, 4)
+    centers = jax.random.normal(ks[0], (6, n))
+    x = centers[jax.random.randint(ks[1], (b,), 0, 6)] + 0.01 * jax.random.normal(ks[2], (b, n))
+    w = jax.random.normal(ks[3], (n, m)) * 0.1
+    return x, w
+
+
+@pytest.mark.parametrize("policy_name", ["pamm", "uniform_crs", "compact", "none"])
+def test_forward_exact(policy_name):
+    """PAMM 'leaves the forward pass untouched' (paper §1)."""
+    x, w = _data(jax.random.key(0))
+    pol = make_policy(policy_name) if policy_name != "pamm" else PammPolicy(ratio=1 / 8)
+    z = compressed_linear(x, w, None, jax.random.key(1), pol)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(x @ w), atol=1e-5)
+
+
+def test_grad_x_and_bias_exact():
+    """Only grad_W is approximated; grad_X and grad_bias are exact (Alg. 3)."""
+    x, w = _data(jax.random.key(2))
+    b = jnp.ones((w.shape[1],)) * 0.3
+    pol = PammPolicy(ratio=1 / 8)
+
+    def f(x_, w_, b_):
+        return jnp.sum(jnp.sin(compressed_linear(x_, w_, b_, jax.random.key(3), pol)))
+
+    def f_exact(x_, w_, b_):
+        return jnp.sum(jnp.sin(x_ @ w_ + b_))
+
+    gx, gb = jax.grad(f, argnums=(0, 2))(x, w, b)
+    gx_e, gb_e = jax.grad(f_exact, argnums=(0, 2))(x, w, b)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_e), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_e), atol=1e-4)
+
+
+def test_grad_w_close_on_clustered():
+    x, w = _data(jax.random.key(4), b=1024)
+    pol = PammPolicy(ratio=1 / 16)
+
+    g = jax.grad(lambda w_: jnp.sum(
+        compressed_linear(x, w_, None, jax.random.key(5), pol) ** 2))(w)
+    g_e = jax.grad(lambda w_: jnp.sum((x @ w_) ** 2))(w)
+    rel = float(jnp.linalg.norm(g - g_e) / jnp.linalg.norm(g_e))
+    assert rel < 0.05
+
+
+def test_shared_state_matches_separate():
+    """Q/K/V sharing one compressed X == three calls with the same key."""
+    x, w1 = _data(jax.random.key(6))
+    w2 = jax.random.normal(jax.random.key(7), w1.shape) * 0.1
+    pol = PammPolicy(ratio=1 / 8)
+
+    def f_shared(ws):
+        z1, z2 = compressed_linear_shared(x, list(ws), [None, None], jax.random.key(8), pol)
+        return jnp.sum(z1 ** 2) + jnp.sum(z2 ** 2)
+
+    def f_sep(ws):
+        z1 = compressed_linear(x, ws[0], None, jax.random.key(8), pol)
+        z2 = compressed_linear(x, ws[1], None, jax.random.key(8), pol)
+        return jnp.sum(z1 ** 2) + jnp.sum(z2 ** 2)
+
+    g_sh = jax.grad(f_shared)((w1, w2))
+    g_sep = jax.grad(f_sep)((w1, w2))
+    for a, b in zip(jax.tree.leaves(g_sh), jax.tree.leaves(g_sep)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_inference_compression_is_dce():
+    """In a forward-only jit the compression is dead code (paper: zero
+    inference impact). We check the compiled HLO has no argmax/sort from
+    the compress path."""
+    x, w = _data(jax.random.key(9))
+    pol = PammPolicy(ratio=1 / 8)
+    fwd = jax.jit(lambda x_, w_: compressed_linear(x_, w_, None, jax.random.key(1), pol))
+    hlo = fwd.lower(x, w).compile().as_text()
+    assert "sort(" not in hlo  # random.choice's permutation would need a sort
+
+
+def test_remat_composition():
+    """PAMM under jax.checkpoint(save_only pamm_state) still trains."""
+    from repro.core.linear import PAMM_CHECKPOINT_NAME
+
+    x, w = _data(jax.random.key(10))
+    pol = PammPolicy(ratio=1 / 8)
+
+    @jax.checkpoint
+    def block(w_):
+        return jnp.sum(compressed_linear(x, w_, None, jax.random.key(11), pol) ** 2)
+
+    g_remat = jax.grad(block)(w)
+    g_plain = jax.grad(lambda w_: jnp.sum(
+        compressed_linear(x, w_, None, jax.random.key(11), pol) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(g_remat), np.asarray(g_plain), atol=1e-4)
+
+    policy = jax.checkpoint_policies.save_only_these_names(PAMM_CHECKPOINT_NAME)
+
+    @jax.tree_util.Partial(jax.checkpoint, policy=policy)
+    def block2(w_):
+        return jnp.sum(compressed_linear(x, w_, None, jax.random.key(11), pol) ** 2)
+
+    g2 = jax.grad(block2)(w)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g_plain), atol=1e-4)
+
+
+def test_key_required_for_stochastic_policies():
+    x, w = _data(jax.random.key(12))
+    with pytest.raises(ValueError):
+        compressed_linear(x, w, None, None, PammPolicy(ratio=1 / 8))

@@ -1,0 +1,173 @@
+"""Unit tests for the PAMM algorithm itself (paper §3.2, Alg. 1)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PammPolicy,
+    UniformCRSPolicy,
+    CompActPolicy,
+    make_policy,
+    num_generators,
+    pamm_apply,
+    pamm_compress,
+    pamm_reconstruct,
+    stored_elements,
+)
+
+
+def clustered(key, b, n, n_clusters=8, noise=0.01):
+    ks = jax.random.split(key, 4)
+    centers = jax.random.normal(ks[0], (n_clusters, n))
+    assign = jax.random.randint(ks[1], (b,), 0, n_clusters)
+    scale = jax.random.uniform(ks[2], (b, 1), minval=0.5, maxval=2.0)
+    return centers[assign] * scale + noise * jax.random.normal(ks[3], (b, n))
+
+
+def test_num_generators():
+    assert num_generators(512, 1 / 512) == 1
+    assert num_generators(16384, 1 / 512) == 32
+    assert num_generators(100, 1 / 512) == 1   # paper §G: k = 1 happens
+    assert num_generators(10, 2.0) == 10       # clamped to b
+
+
+def test_lemma1_self_assignment():
+    """A row that IS a generator has |csim| = 1 with itself (Lemma 1)."""
+    x = clustered(jax.random.key(0), 256, 32)
+    st = pamm_compress(x, 64, math.inf, jax.random.key(1))
+    # every row's best |csim| is >= its csim with any single generator;
+    # generator rows achieve exactly 1 (up to fp error)
+    recon = pamm_reconstruct(st)
+    norms = jnp.linalg.norm(x, axis=1)
+    err = jnp.linalg.norm(x - recon, axis=1)
+    # Lemma-1 projection identity: err^2 = ||x||^2 (1 - cs^2) <= ||x||^2
+    assert float(jnp.max(err / norms)) <= 1.0 + 1e-5
+
+
+def test_eps_inf_keeps_all_beta_one():
+    x = jax.random.normal(jax.random.key(0), (512, 64))
+    st = pamm_compress(x, 16, math.inf, jax.random.key(1))
+    assert int(jnp.sum(st.alpha == 0)) == 0 or float(st.beta) == pytest.approx(
+        512 / float(jnp.sum(st.alpha != 0)), rel=1e-5
+    )
+    assert float(st.beta) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_eps_zero_is_uniform_crs():
+    """eps = 0 keeps only rows whose best representative is themselves."""
+    x = jax.random.normal(jax.random.key(0), (512, 64))
+    st = pamm_compress(x, 32, 0.0, jax.random.key(1))
+    kept = st.alpha != 0
+    # kept rows are exactly (a subset including) the sampled generators:
+    # their |csim| with themselves is 1
+    n_kept = int(jnp.sum(kept))
+    assert 0 < n_kept <= 40  # ~k generators (ties can add colinear rows)
+    # beta de-biases: b / n_kept
+    assert float(st.beta) == pytest.approx(512 / n_kept, rel=1e-5)
+
+
+def test_eps_monotone_coverage():
+    """Coverage (kept fraction) grows with eps (paper Fig. 7)."""
+    x = jax.random.normal(jax.random.key(2), (1024, 64))
+    kept = []
+    for eps in (0.0, 0.2, 0.5, 1.0, math.inf):
+        st = pamm_compress(x, 64, eps, jax.random.key(3))
+        kept.append(int(jnp.sum(st.alpha != 0)))
+    assert kept == sorted(kept)
+    assert kept[-1] == 1024
+
+
+def test_apply_equals_reconstruct_path():
+    """C^T Btilde == Atilde^T B (the paper's efficiency identity)."""
+    x = clustered(jax.random.key(4), 300, 48)
+    gz = jax.random.normal(jax.random.key(5), (300, 24))
+    st = pamm_compress(x, 32, math.inf, jax.random.key(6))
+    direct = st.beta * (pamm_reconstruct(st).T @ gz)
+    fast = pamm_apply(st, gz)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(fast), atol=1e-4)
+
+
+def test_clustered_data_low_error():
+    """On clustered activations PAMM approximates well (paper §3.1/App. H)."""
+    x = clustered(jax.random.key(7), 2048, 64, n_clusters=8, noise=0.005)
+    gz = jax.random.normal(jax.random.key(8), (2048, 32))
+    st = pamm_compress(x, 32, math.inf, jax.random.key(9))
+    exact = x.T @ gz
+    approx = pamm_apply(st, gz)
+    rel = float(jnp.linalg.norm(exact - approx) / jnp.linalg.norm(exact))
+    assert rel < 0.05
+
+
+def test_error_decreases_with_k():
+    """Relative L2 error shrinks as r grows (paper Fig. 6b)."""
+    x = clustered(jax.random.key(10), 2048, 64, n_clusters=32, noise=0.05)
+    gz = jax.random.normal(jax.random.key(11), (2048, 32))
+    exact = x.T @ gz
+    errs = []
+    for k in (4, 32, 256):
+        st = pamm_compress(x, k, math.inf, jax.random.key(12))
+        errs.append(float(jnp.linalg.norm(exact - pamm_apply(st, gz))
+                          / jnp.linalg.norm(exact)))
+    assert errs[0] > errs[-1]
+
+
+def test_stored_elements():
+    assert stored_elements(16384, 2048, 32) == 32 * 2048 + 2 * 16384
+    pol = PammPolicy(ratio=1 / 512)
+    # >97% saving at the paper's operating point (Fig. 3b)
+    b, n = 131072, 2048
+    assert pol.stored_elements(b, n) / (b * n) < 0.03
+
+
+def test_policy_registry():
+    assert make_policy("pamm", ratio=0.1).name == "pamm"
+    assert make_policy("uniform_crs").name == "uniform_crs"
+    assert make_policy("compact").name == "compact"
+    assert make_policy("none").name == "none"
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_crs_policy_unbiased_in_expectation():
+    """E over sampling keys of the CRS gradient ~ exact gradient."""
+    x = jax.random.normal(jax.random.key(13), (256, 16))
+    gz = jax.random.normal(jax.random.key(14), (256, 8))
+    exact = np.asarray(x.T @ gz)
+    pol = UniformCRSPolicy(ratio=0.25)
+    acc = np.zeros_like(exact)
+    n_trials = 200
+    for t in range(n_trials):
+        st = pol.compress(x, jax.random.key(100 + t))
+        acc += np.asarray(pol.grad_w(st, gz, 16))
+    rel = np.linalg.norm(acc / n_trials - exact) / np.linalg.norm(exact)
+    assert rel < 0.15
+
+
+def test_compact_policy_unbiased_and_noisy():
+    """CompAct's Gaussian sketch is unbiased (E[P P^T] = I) but noisy — the
+    per-sample error does NOT vanish even at kp = n, which is exactly why it
+    loses to PAMM at matched memory (paper Fig 4a)."""
+    x = jax.random.normal(jax.random.key(15), (512, 64))
+    gz = jax.random.normal(jax.random.key(16), (512, 32))
+    exact = np.asarray(x.T @ gz)
+    pol = CompActPolicy(ratio=1.0)
+    acc = np.zeros_like(exact)
+    trials = 64
+    for t in range(trials):
+        st = pol.compress(x, jax.random.key(400 + t))
+        acc += np.asarray(pol.grad_w(st, gz, 64))
+    mean_rel = np.linalg.norm(acc / trials - exact) / np.linalg.norm(exact)
+    assert mean_rel < 0.25  # averages toward exact (unbiased)
+    one = np.asarray(pol.grad_w(pol.compress(x, jax.random.key(99)), gz, 64))
+    single_rel = np.linalg.norm(one - exact) / np.linalg.norm(exact)
+    assert single_rel > 3 * mean_rel  # ...but each sample is noisy
+
+
+def test_zero_rows_safe():
+    x = jnp.zeros((64, 16)).at[0].set(1.0)
+    st = pamm_compress(x, 4, math.inf, jax.random.key(18))
+    out = pamm_apply(st, jnp.ones((64, 8)))
+    assert not bool(jnp.any(jnp.isnan(out)))

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) of PAMM and kernel invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pamm import pamm_apply, pamm_compress, pamm_reconstruct
+from repro.kernels import ref
+from repro.kernels.pamm_apply import segment_matmul
+from repro.kernels.pamm_compress import csim_argmax
+from repro.runtime.grad_compress import ef_dequantize, ef_quantize
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(8, 200),
+    n=st.integers(2, 64),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**30),
+)
+def test_compress_invariants(b, n, k, seed):
+    k = min(k, b)
+    x = jax.random.normal(jax.random.key(seed), (b, n))
+    stt = pamm_compress(x, k, math.inf, jax.random.key(seed + 1))
+    # shapes
+    assert stt.generators.shape == (k, n)
+    assert stt.alpha.shape == (b,)
+    assert stt.assign.shape == (b,)
+    # assignments in range
+    assert int(jnp.min(stt.assign)) >= 0 and int(jnp.max(stt.assign)) < k
+    # eps = inf keeps everything -> beta == 1
+    assert float(stt.beta) == 1.0
+    # projection property: ||x - atilde|| <= ||x|| (projection onto a line
+    # through the origin can never be farther than the origin itself)
+    recon = pamm_reconstruct(stt)
+    err = jnp.linalg.norm(x - recon, axis=1)
+    nrm = jnp.linalg.norm(x, axis=1)
+    assert bool(jnp.all(err <= nrm * (1 + 1e-4) + 1e-5))
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(8, 128),
+    m=st.integers(1, 48),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**30),
+)
+def test_apply_is_linear_in_b(b, m, k, seed):
+    """pamm_apply(state, .) must be a linear map (it IS Atilde^T B)."""
+    x = jax.random.normal(jax.random.key(seed), (b, 16))
+    stt = pamm_compress(x, min(k, b), math.inf, jax.random.key(seed + 1))
+    b1 = jax.random.normal(jax.random.key(seed + 2), (b, m))
+    b2 = jax.random.normal(jax.random.key(seed + 3), (b, m))
+    lhs = pamm_apply(stt, b1 + 2.5 * b2)
+    rhs = pamm_apply(stt, b1) + 2.5 * pamm_apply(stt, b2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(4, 300),
+    n=st.integers(2, 100),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**30),
+)
+def test_kernel_csim_matches_ref(b, n, k, seed):
+    k = min(k, b)
+    x = jax.random.normal(jax.random.key(seed), (b, n))
+    idx = jax.random.choice(jax.random.key(seed + 1), b, shape=(k,), replace=False)
+    c = x[idx]
+    cs, f, na = csim_argmax(x, c)
+    cs_r, f_r, na_r = ref.csim_argmax_ref(x, c)
+    np.testing.assert_allclose(np.abs(np.asarray(cs)), np.abs(np.asarray(cs_r)),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(na), np.asarray(na_r), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(4, 300),
+    m=st.integers(1, 130),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**30),
+)
+def test_kernel_segment_matmul_matches_ref(b, m, k, seed):
+    key = jax.random.key(seed)
+    f = jax.random.randint(key, (b,), 0, k).astype(jnp.int32)
+    alpha = jax.random.normal(jax.random.key(seed + 1), (b,))
+    gz = jax.random.normal(jax.random.key(seed + 2), (b, m))
+    mine = segment_matmul(f, alpha, gz, k)
+    oracle = ref.segment_matmul_ref(f, alpha, gz, k)
+    np.testing.assert_allclose(np.asarray(mine), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.tuples(st.integers(1, 8), st.integers(1, 64)),
+    seed=st.integers(0, 2**30),
+)
+def test_ef_quantize_error_bound(shape, seed):
+    """|residual| <= scale/2 element-wise, and dequant roundtrip is close."""
+    g = jax.random.normal(jax.random.key(seed), shape) * 3.0
+    err = jnp.zeros_like(g)
+    q, scale, new_err = ef_quantize(g, err)
+    assert q.dtype == jnp.int8
+    deq = ef_dequantize(q, scale)
+    np.testing.assert_allclose(np.asarray(deq + new_err), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(new_err))) <= float(scale) * 0.5 + 1e-7
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**30))
+def test_ef_feedback_accumulates(seed):
+    """With a CONSTANT gradient, EF-compressed updates average to the true
+    gradient (error feedback kills the bias)."""
+    g = jax.random.normal(jax.random.key(seed), (32,))
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        q, scale, err = ef_quantize(g, err)
+        total = total + ef_dequantize(q, scale)
+    np.testing.assert_allclose(np.asarray(total / steps), np.asarray(g),
+                               atol=float(jnp.max(jnp.abs(g))) * 0.02 + 1e-4)

@@ -1,0 +1,91 @@
+"""Integration: end-to-end training behaviour of the full stack."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config
+from repro.data import SyntheticStream
+from repro.train import init_train_state, make_train_step
+
+
+def run_training(policy_name, steps=120, ratio=1 / 16, seed=0, arch="internlm2-1.8b_smoke"):
+    cfg = get_config(arch)
+    rcfg = RunConfig(
+        policy_name=policy_name, pamm_ratio=ratio, lr=5e-3, seed=seed,
+        compute_dtype="float32", param_dtype="float32",
+    )
+    state, _ = init_train_state(cfg, rcfg, jax.random.key(seed))
+    stream = SyntheticStream.for_arch(cfg, seq_len=32, global_batch=8, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, rcfg, total_steps=steps))
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.get_batch(i).items()}
+        state, m = step_fn(state, batch, jnp.int32(i))
+        losses.append(float(m["nll"]))
+    return losses
+
+
+def test_pamm_training_learns():
+    losses = run_training("pamm", steps=150)
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.8, (first, last)
+    assert not math.isnan(last)
+
+
+def test_pamm_matches_baseline_quality():
+    """The paper's core claim at reduced scale: PAMM ~ full-rank ppl."""
+    base = np.mean(run_training("none", steps=150)[-10:])
+    pamm = np.mean(run_training("pamm", steps=150)[-10:])
+    # within 5% relative NLL of the exact baseline
+    assert pamm < base * 1.05 + 0.05, (base, pamm)
+
+
+def test_crs_worse_than_pamm_at_same_ratio():
+    """Fig 4a qualitative: Uniform-CRS degrades faster than PAMM."""
+    pamm = np.mean(run_training("pamm", steps=150, ratio=1 / 64)[-10:])
+    crs = np.mean(run_training("uniform_crs", steps=150, ratio=1 / 64)[-10:])
+    assert crs >= pamm - 0.02, (pamm, crs)
+
+
+def test_determinism_same_seed():
+    a = run_training("pamm", steps=12, seed=3)
+    b = run_training("pamm", steps=12, seed=3)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_train_with_remat_pamm_policy():
+    """remat='pamm' (save only compressed states) trains equivalently."""
+    cfg = get_config("internlm2-1.8b_smoke")
+    losses = {}
+    for remat in ("none", "pamm", "full"):
+        rcfg = RunConfig(policy_name="pamm", pamm_ratio=1 / 8, lr=1e-3, seed=0,
+                         compute_dtype="float32", param_dtype="float32", remat=remat)
+        state, _ = init_train_state(cfg, rcfg, jax.random.key(0))
+        stream = SyntheticStream.for_arch(cfg, 32, 4)
+        step_fn = jax.jit(make_train_step(cfg, rcfg, total_steps=10))
+        batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()}
+        for i in range(3):
+            state, m = step_fn(state, batch, jnp.int32(i))
+        losses[remat] = float(m["loss"])
+    # remat must not change the math (same PRNG -> same compressed states)
+    assert losses["none"] == pytest.approx(losses["pamm"], rel=1e-4)
+    assert losses["none"] == pytest.approx(losses["full"], rel=1e-4)
+
+
+def test_serve_greedy_decode_runs():
+    from repro.models import init_model
+    from repro.train.serve_step import greedy_decode
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32", policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    stream = SyntheticStream.for_arch(cfg, 16, 2)
+    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()
+             if k in ("tokens",)}
+    out = greedy_decode(cfg, rcfg, params, batch, steps=8, max_len=32)
+    assert out.shape == (2, 8)
+    assert int(jnp.max(out)) < cfg.vocab_size
