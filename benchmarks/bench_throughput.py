@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, note, timeit
 from repro.configs import RunConfig, get_config
 from repro.data import SyntheticStream
-from repro.models import init_model, loss_fn, forward, make_run_policy
+from repro.models import init_model, loss_fn, forward
 from repro.train import init_train_state, make_train_step
 
 
@@ -30,12 +30,12 @@ def run(budget: str = "small"):
         emit(f"table2a_train_step[{policy}]", us, f"tok_per_s={tokens / (us / 1e6):.0f}")
         rows[policy] = us
 
-        # forward / backward split (Table 2b)
-        pol = make_run_policy(rcfg)
+        # forward / backward split (Table 2b); plan=None derives the
+        # CompressionPlan from rcfg (legacy flags or rcfg.compression).
         params = state.params
-        fwd = jax.jit(lambda p, b: loss_fn(cfg, rcfg, pol, p, b, jax.random.key(1))[0])
+        fwd = jax.jit(lambda p, b: loss_fn(cfg, rcfg, None, p, b, jax.random.key(1))[0])
         us_f = timeit(lambda: fwd(params, batch))
-        grad = jax.jit(jax.grad(lambda p, b: loss_fn(cfg, rcfg, pol, p, b, jax.random.key(1))[0]))
+        grad = jax.jit(jax.grad(lambda p, b: loss_fn(cfg, rcfg, None, p, b, jax.random.key(1))[0]))
         us_fb = timeit(lambda: jax.tree.leaves(grad(params, batch))[0])
         emit(f"table2b_forward[{policy}]", us_f, f"tok_per_s={tokens / (us_f / 1e6):.0f}")
         emit(f"table2b_fwd_bwd[{policy}]", us_fb, f"tok_per_s={tokens / (us_fb / 1e6):.0f}")

@@ -15,6 +15,7 @@ HARNESSES = [
     ("fig3a_table5_pretrain_ppl_memory", "benchmarks.bench_pretrain_ppl"),
     ("table3_bs_seq_ablation", "benchmarks.bench_ablation_bs_seq"),
     ("fig4a_compression_compare", "benchmarks.bench_compression_compare"),
+    ("plan_mixed_whole_network", "benchmarks.bench_plan_mixed"),
     ("fig4b_epsilon", "benchmarks.bench_epsilon"),
     ("appH_l2_error_coverage", "benchmarks.bench_l2_error"),
     ("appJ_complexity", "benchmarks.bench_complexity"),

@@ -14,8 +14,9 @@ from repro.train import init_train_state, make_train_step
 def main():
     cfg = get_config("llama-tiny")                  # any registered arch
     rcfg = RunConfig(
-        policy_name="pamm",                          # the paper's method
-        pamm_ratio=1 / 512,                          # x512 compression
+        # per-site CompressionPlan spec (DESIGN.md §2): the paper's method
+        # at x512 on the QKV projections, CompAct on the FFN projections.
+        compression="attn.qkv=pamm(r=1/512,eps=inf);ffn.*=compact(r=1/4)",
         compute_dtype="float32", param_dtype="float32",
     )
     state, _ = init_train_state(cfg, rcfg, jax.random.key(0))
@@ -27,6 +28,11 @@ def main():
         state, metrics = step(state, batch, jnp.int32(i))
         if i % 10 == 0:
             print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
+
+    # per-site telemetry flows through train metrics
+    for k, v in sorted(metrics.items()):
+        if k.startswith("site/"):
+            print(f"{k} = {float(v):.5f}")
 
     report = qkv_activation_bytes(
         PammPolicy(ratio=1 / 512), n_layers=cfg.n_layers,

@@ -147,15 +147,23 @@ def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
 class RunConfig:
     """Training/serving-time knobs, orthogonal to the architecture."""
 
-    policy_name: str = "pamm"        # pamm | uniform_crs | compact | none
-    pamm_ratio: float = 1.0 / 512.0
-    pamm_eps: float = math.inf
-    pamm_blocks: int = 1             # shard-local PAMM blocks (set = DP degree)
-    pamm_k_max: Optional[int] = None # Lemma-2 cap on generators per block
-    use_kernel: bool = False         # route PAMM through the Pallas kernels
-    pamm_on_recurrent: bool = False  # extend PAMM to RG-LRU input projections
-    pamm_on_ssm_inproj: bool = False # extend PAMM to Mamba-2 input projections
-    pamm_shard_local: bool = True    # compress per data-shard (no cross-shard gather)
+    # --- activation compression -------------------------------------------
+    # ``compression`` is the canonical way to configure compression: a
+    # CompressionPlan spec (core/plan.py, DESIGN.md §2), e.g.
+    #   "attn.qkv=pamm(r=1/512,eps=inf);ffn.*=compact(r=1/4);ssm.in=none"
+    # When empty, the DEPRECATED flat fields below are translated into an
+    # equivalent spec (core.plan.plan_spec_from_legacy) — they resolve to
+    # bit-identical per-site policies and remain supported for old configs.
+    compression: str = ""
+    policy_name: str = "pamm"        # DEPRECATED: pamm | uniform_crs | compact | none
+    pamm_ratio: float = 1.0 / 512.0  # DEPRECATED: use r= in the plan spec
+    pamm_eps: float = math.inf       # DEPRECATED: use eps= in the plan spec
+    pamm_blocks: int = 1             # DEPRECATED: blocks= (auto = DP degree of mesh)
+    pamm_k_max: Optional[int] = None # DEPRECATED: k_max=
+    use_kernel: bool = False         # DEPRECATED: backend=pallas (auto on TPU)
+    pamm_on_recurrent: bool = False  # DEPRECATED: rglru.in=pamm(...)
+    pamm_on_ssm_inproj: bool = False # DEPRECATED: ssm.in=pamm(...)
+    pamm_shard_local: bool = True    # DEPRECATED: blocks=auto derives from mesh
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
     remat: str = "none"              # none | full | pamm (save_only pamm_state + block outs)

@@ -1,5 +1,5 @@
 """PAMM core: the paper's contribution as a composable JAX module."""
-from repro.core.linear import PAMM_CHECKPOINT_NAME, compressed_linear
+from repro.core.linear import PAMM_CHECKPOINT_NAME, CompressedSite, compressed_linear
 from repro.core.pamm import (
     PammState,
     num_generators,
@@ -7,6 +7,15 @@ from repro.core.pamm import (
     pamm_compress,
     pamm_reconstruct,
     stored_elements,
+)
+from repro.core.plan import (
+    CompressionPlan,
+    ResolvedPlan,
+    Site,
+    SiteCtx,
+    enumerate_sites,
+    make_run_plan,
+    plan_spec_from_legacy,
 )
 from repro.core.policies import (
     CompActPolicy,
@@ -16,10 +25,16 @@ from repro.core.policies import (
     UniformCRSPolicy,
     make_policy,
 )
-from repro.core.stats import ActivationReport, qkv_activation_bytes
+from repro.core.stats import (
+    ActivationReport,
+    plan_activation_report,
+    qkv_activation_bytes,
+    site_telemetry_metrics,
+)
 
 __all__ = [
     "PAMM_CHECKPOINT_NAME",
+    "CompressedSite",
     "compressed_linear",
     "PammState",
     "num_generators",
@@ -27,6 +42,13 @@ __all__ = [
     "pamm_compress",
     "pamm_reconstruct",
     "stored_elements",
+    "CompressionPlan",
+    "ResolvedPlan",
+    "Site",
+    "SiteCtx",
+    "enumerate_sites",
+    "make_run_plan",
+    "plan_spec_from_legacy",
     "CompActPolicy",
     "CompressionPolicy",
     "ExactPolicy",
@@ -34,5 +56,7 @@ __all__ = [
     "UniformCRSPolicy",
     "make_policy",
     "ActivationReport",
+    "plan_activation_report",
     "qkv_activation_bytes",
+    "site_telemetry_metrics",
 ]

@@ -17,6 +17,7 @@ layer is approximated. grad_X and grad_bias are exact (paper Alg. 3).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -26,9 +27,19 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.policies import CompressionPolicy, ExactPolicy
 
-__all__ = ["compressed_linear", "compressed_linear_shared", "PAMM_CHECKPOINT_NAME"]
+__all__ = [
+    "CompressedSite",
+    "compressed_linear",
+    "compressed_linear_shared",
+    "PAMM_CHECKPOINT_NAME",
+    "STATS_LEN",
+]
 
 PAMM_CHECKPOINT_NAME = "pamm_state"
+
+# Per-site telemetry vector layout (accumulated through scan carries):
+#   [stored_bytes, kept_rows, total_rows, beta_sum, n_observations]
+STATS_LEN = 5
 
 
 def _zero_cotangent(x):
@@ -108,11 +119,147 @@ def compressed_linear(
     if key is None:
         raise ValueError(f"policy {policy.name!r} needs a PRNG key")
 
+    (z2d,), _ = _compress_and_project(policy, x2d, [w], [bias], key)
+    return z2d.reshape(*lead, m)
+
+
+def _exact_linear(x2d, w, bias):
+    z2d = x2d @ w.astype(x2d.dtype)
+    if bias is not None:
+        z2d = z2d + bias.astype(z2d.dtype)
+    return z2d
+
+
+def _compress_and_project(policy: CompressionPolicy, x2d, ws, biases, key):
+    """Shared core: one compressed state backing several projections of x2d.
+
+    Returns ``([z2d...], state)``. The single place that wires compress ->
+    checkpoint_name tag -> custom_vjp matmuls, used by both the legacy
+    ``compressed_linear*`` functions and ``CompressedSite``.
+    """
     state = policy.compress(jax.lax.stop_gradient(x2d), key)
     state = jax.tree.map(lambda t: checkpoint_name(t, PAMM_CHECKPOINT_NAME), state)
-    fn = _compressed_matmul(policy, bias is not None)
-    z2d = fn(x2d, w, bias, state) if bias is not None else fn(x2d, w, state)
-    return z2d.reshape(*lead, m)
+    outs = []
+    for w, bias in zip(ws, biases):
+        fn = _compressed_matmul(policy, bias is not None)
+        outs.append(fn(x2d, w, bias, state) if bias is not None else fn(x2d, w, state))
+    return outs, state
+
+
+def _state_stats(policy: CompressionPolicy, state, b: int):
+    """Telemetry vector for one compressed state (STATS_LEN floats).
+
+    kept_rows / beta are read off the state via ``policy.state_stats``;
+    stored_bytes is the state's actual byte size (shapes/dtypes are static).
+    """
+    kept, beta = policy.state_stats(state, b)
+    stored = sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(state)
+    )
+    return jnp.stack([
+        jnp.float32(stored),
+        jnp.asarray(kept, jnp.float32),
+        jnp.float32(b),
+        jnp.asarray(beta, jnp.float32),
+        jnp.float32(1.0),
+    ])
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedSite:
+    """One resolved compression site: (path, id, policy).
+
+    This is the single runtime entry point for compressed projections. It
+    owns deterministic PRNG derivation — ``fold_in(key, site_id)`` — so
+    every site draws an independent, reproducible stream from the one
+    per-block key, and it reports per-site telemetry (stored bytes,
+    kept-row fraction, beta) alongside the projection outputs.
+
+    ``path`` is the site's address in the plan (DESIGN.md §1), e.g.
+    ``"stage0.attn.attn.qkv"`` or ``"lm_head"``; ``site_id`` is its index
+    in the canonical site enumeration of the architecture.
+    """
+
+    path: str
+    site_id: int
+    policy: CompressionPolicy
+    n_in: int = 0           # input width (for analytic memory reports)
+    multiplicity: int = 1   # layers covered by this site (stage rep x kind count)
+    # Path of a sibling site whose compressed state backs this one too
+    # (ffn.up sharing ffn.gate's state when their policies agree, Fig. 2).
+    # Shared sites have no telemetry of their own — stats live on the owner.
+    shared_with: str | None = None
+
+    @property
+    def is_exact(self) -> bool:
+        return isinstance(self.policy, ExactPolicy)
+
+    def derive_key(self, key):
+        """The site-local PRNG key: fold the canonical site id into the
+        per-block step key (replaces ad-hoc ``fold_in(key, 1)`` call sites)."""
+        if key is None:
+            return None
+        return jax.random.fold_in(key, self.site_id)
+
+    def apply(self, x, w, bias, key):
+        """``x @ w (+ bias)`` under this site's policy.
+
+        Returns ``(z, stats)`` where stats is the STATS_LEN telemetry
+        vector (None for exact sites: nothing is compressed).
+        """
+        (z,), stats = self.apply_shared(x, [w], [bias], key)
+        return z, stats
+
+    def apply_shared(self, x, ws, biases, key):
+        """Several projections of one input sharing ONE compressed state
+        (paper Fig. 2: Q, K, V all read the same X)."""
+        n = ws[0].shape[0]
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, n)
+
+        if self.is_exact:
+            outs = [
+                _exact_linear(x2d, w, b).reshape(*lead, w.shape[1])
+                for w, b in zip(ws, biases)
+            ]
+            return outs, None
+
+        site_key = self.derive_key(key)
+        if site_key is None:
+            raise ValueError(
+                f"site {self.path!r} ({self.policy.name}) needs a PRNG key"
+            )
+        outs2d, state = _compress_and_project(self.policy, x2d, ws, biases, site_key)
+        stats = _state_stats(self.policy, state, x2d.shape[0])
+        outs = [z2d.reshape(*lead, w.shape[1]) for z2d, w in zip(outs2d, ws)]
+        return outs, stats
+
+    def apply_batched(self, xs, ws, key):
+        """Batched-expert variant: ``xs (E, T, n)``, each w in ws ``(E, n, m)``.
+
+        One compressed state per expert (vmapped), per-expert keys derived
+        from the site key. Returns ``([z...], stats)`` with stats summed
+        over experts (beta averaged via the count column).
+        """
+        e = xs.shape[0]
+        if self.is_exact:
+            outs = [jnp.einsum("ecd,edf->ecf", xs, w.astype(xs.dtype)) for w in ws]
+            return outs, None
+        site_key = self.derive_key(key)
+        if site_key is None:
+            raise ValueError(f"site {self.path!r} needs a PRNG key")
+        keys = jax.random.split(site_key, e)
+
+        def one(xb, kb, *wbs):
+            outs, state = _compress_and_project(
+                self.policy, xb, wbs, (None,) * len(wbs), kb
+            )
+            stats = _state_stats(self.policy, state, xb.shape[0])
+            return tuple(outs), stats
+
+        outs, stats = jax.vmap(one)(xs, keys, *ws)
+        return list(outs), jnp.sum(stats, axis=0)
 
 
 def compressed_linear_shared(
@@ -145,11 +292,5 @@ def compressed_linear_shared(
     if key is None:
         raise ValueError(f"policy {policy.name!r} needs a PRNG key")
 
-    state = policy.compress(jax.lax.stop_gradient(x2d), key)
-    state = jax.tree.map(lambda t: checkpoint_name(t, PAMM_CHECKPOINT_NAME), state)
-    outs = []
-    for w, bias in zip(ws, biases):
-        fn = _compressed_matmul(policy, bias is not None)
-        z2d = fn(x2d, w, bias, state) if bias is not None else fn(x2d, w, state)
-        outs.append(z2d.reshape(*lead, w.shape[1]))
-    return outs
+    outs2d, _ = _compress_and_project(policy, x2d, ws, biases, key)
+    return [z2d.reshape(*lead, w.shape[1]) for z2d, w in zip(outs2d, ws)]

@@ -90,10 +90,18 @@ def pamm_compress(
     # eps = inf  => threshold -inf => keep all;  eps = 0 => keep iff |cs| = 1.
     thresh = 1.0 - float(eps) * float(eps) if math.isfinite(eps) else -jnp.inf
     keep = cs * cs >= thresh
-    alpha = jnp.where(keep, alpha, 0.0)
 
-    n_kept = jnp.sum(keep.astype(compute_dtype))
-    beta = b / jnp.maximum(n_kept, 1.0)
+    # beta = b_eff / n_kept over rows that CAN contribute: an all-zero row
+    # (capacity padding in MoE expert buffers) adds nothing to A^T B, so it
+    # must count in neither numerator nor denominator — else finite-eps
+    # compression of padded buffers inflates beta by the padding ratio.
+    nonzero = norm_a > 0
+    contributing = keep & nonzero
+    alpha = jnp.where(contributing, alpha, 0.0)
+
+    b_eff = jnp.sum(nonzero.astype(compute_dtype))
+    n_kept = jnp.sum(contributing.astype(compute_dtype))
+    beta = b_eff / jnp.maximum(n_kept, 1.0)
     return PammState(c, alpha, assign, beta.astype(compute_dtype))
 
 

@@ -1,0 +1,596 @@
+"""CompressionPlan: declarative per-site activation compression.
+
+The paper's policy object compressed exactly one thing — the fused QKV
+projection — and every extension (RG-LRU inputs, Mamba in-projections,
+kernels, shard-local blocking) grew another flat ``RunConfig`` boolean.
+This module replaces that with a *plan*: a compact rule spec resolved
+against the architecture's compression **sites**.
+
+A site is (stage, block kind, projection role). Roles:
+
+  ``attn.qkv``       fused Q/K/V input projection (one shared state, Fig. 2)
+  ``attn.cross_kv``  cross-attention K/V over image embeddings
+  ``ffn.gate`` / ``ffn.up`` / ``ffn.down``   dense SwiGLU projections
+  ``moe.expert``     batched expert gate/up projections (per-expert states)
+  ``ssm.in``         Mamba-2 in-projection
+  ``rglru.in``       RG-LRU recurrent-branch input projection
+  ``lm_head``        final logits projection (chunked cross-entropy)
+
+Spec grammar (full reference in DESIGN.md §2)::
+
+    plan     := rule (';' rule)*
+    rule     := pattern '=' policy
+    policy   := name [ '(' key '=' value (',' key '=' value)* ')' ]
+
+    "attn.qkv=pamm(r=1/512,eps=inf);ffn.*=compact(r=1/4);ssm.in=none"
+
+Patterns are fnmatch globs tested against the site's role (``ffn.gate``),
+its ``/``-qualified kind and stage forms (``moe/attn.qkv``,
+``stage2/rec/rglru.in``) and its dotted path (``stage2.rec.rglru.in``).
+**The last matching rule wins**; unmatched sites stay exact. Policy names: ``pamm``, ``uniform_crs`` (alias
+``crs``), ``compact``, ``none`` (alias ``exact``). PAMM args: ``r``
+(ratio, fractions allowed), ``eps`` (float or ``inf``), ``blocks``
+(int or ``auto`` = data-parallel degree of the mesh at resolution time),
+``k_max`` (int or ``none``), ``backend`` (``auto`` | ``jnp`` | ``pallas``;
+``auto`` = pallas on TPU). ``uniform_crs`` / ``compact`` take ``r``.
+
+Resolution (``CompressionPlan.resolve``) happens once per run, *with the
+mesh in hand*, so backend selection and shard-local blocking are derived
+facts, not user-threaded flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+import warnings
+from fnmatch import fnmatchcase
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import STATS_LEN, CompressedSite, _exact_linear
+from repro.core.policies import (
+    CompActPolicy,
+    CompressionPolicy,
+    ExactPolicy,
+    PammPolicy,
+    UniformCRSPolicy,
+)
+
+__all__ = [
+    "Site",
+    "Rule",
+    "CompressionPlan",
+    "ResolvedPlan",
+    "SiteCtx",
+    "enumerate_sites",
+    "make_run_plan",
+    "plan_spec_from_legacy",
+    "resolve_for_run",
+    "as_resolved",
+    "exact_ctx",
+]
+
+_EXACT = ExactPolicy()
+
+ROLES = (
+    "attn.qkv", "attn.cross_kv",
+    "ffn.gate", "ffn.up", "ffn.down",
+    "moe.expert", "ssm.in", "rglru.in", "lm_head",
+)
+
+_ATTN_FFN = ("attn.qkv", "ffn.gate", "ffn.up", "ffn.down")
+
+
+def _roles_for(kind: str, cfg) -> tuple[str, ...]:
+    if kind in ("attn", "swa", "latt"):
+        return _ATTN_FFN
+    if kind == "moe":
+        roles = ("attn.qkv", "moe.expert")
+        if cfg.n_shared_experts:
+            roles = roles + ("ffn.gate", "ffn.up", "ffn.down")
+        return roles
+    if kind == "xattn":
+        return ("attn.qkv", "attn.cross_kv", "ffn.gate", "ffn.up", "ffn.down")
+    if kind == "rec":
+        return ("rglru.in", "ffn.gate", "ffn.up", "ffn.down")
+    if kind == "ssm":
+        return ("ssm.in",)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _role_n_in(kind: str, role: str, cfg) -> int:
+    """Input width of the projection at a role (analytic memory reports)."""
+    if role == "ffn.down":
+        # only the moe kind's ffn.* roles are the shared-expert FFN; dense
+        # blocks in hybrid MoE models keep their own d_ff
+        if kind == "moe" and cfg.n_shared_experts:
+            return cfg.moe_d_ff * cfg.n_shared_experts
+        return cfg.d_ff
+    return cfg.d_model  # every other role projects the residual stream
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """Identity of one compressible projection in the architecture."""
+
+    stage: int    # stage index; -1 for model-level sites (lm_head)
+    kind: str     # block kind, or "head"
+    role: str
+    n_in: int = 0
+    multiplicity: int = 1  # layers covered: stage repeat x kind count in unit
+
+    @property
+    def path(self) -> str:
+        if self.stage < 0:
+            return self.role
+        return f"stage{self.stage}.{self.kind}.{self.role}"
+
+    def matches(self, pattern: str) -> bool:
+        # Kind/stage qualification uses '/' so role globs cannot collide
+        # with kind names ('attn.*' must not match kind=attn role=ffn.gate).
+        cands = (
+            self.role,
+            f"{self.kind}/{self.role}",
+            f"stage{self.stage}/{self.kind}/{self.role}",
+            self.path,
+        )
+        return any(fnmatchcase(c, pattern) for c in cands)
+
+
+def enumerate_sites(cfg) -> list[Site]:
+    """Canonical site enumeration for an architecture.
+
+    Order (and therefore each site's ``site_id``) is deterministic: stages
+    in order, kinds in first-appearance order within the unit, roles in the
+    kind's role order, then ``lm_head``. Both the legacy shim and explicit
+    plan specs resolve against this same enumeration, which is what makes
+    their PRNG streams (``fold_in(key, site_id)``) line up exactly.
+    """
+    sites: list[Site] = []
+    for si, (unit, rep) in enumerate(cfg.stages):
+        for kind in dict.fromkeys(unit):
+            mult = rep * sum(1 for k in unit if k == kind)
+            for role in _roles_for(kind, cfg):
+                sites.append(Site(si, kind, role, _role_n_in(kind, role, cfg), mult))
+    sites.append(Site(-1, "head", "lm_head", cfg.d_model, 1))
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    pattern: str
+    policy_name: str
+    args: tuple[tuple[str, Any], ...] = ()
+
+
+_POLICY_RE = re.compile(r"^\s*([\w.]+)\s*(?:\((.*)\))?\s*$", re.S)
+
+_POLICY_ALIASES = {"exact": "none", "crs": "uniform_crs"}
+_POLICY_ARGS = {
+    "pamm": {"r", "eps", "blocks", "k_max", "backend"},
+    "uniform_crs": {"r"},
+    "compact": {"r"},
+    "none": set(),
+}
+
+
+def _parse_value(s: str):
+    s = s.strip()
+    low = s.lower()
+    if low in ("inf", "+inf", "infinity"):
+        return math.inf
+    if low == "none":
+        return None
+    if low in ("true", "false"):
+        return low == "true"
+    if "/" in s:
+        num, den = s.split("/", 1)
+        return float(num) / float(den)
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        return low
+
+
+def _parse_rule(text: str) -> Rule:
+    if "=" not in text:
+        raise ValueError(f"plan rule {text!r}: expected 'pattern=policy'")
+    pattern, policy = text.split("=", 1)
+    pattern = pattern.strip()
+    if not pattern:
+        raise ValueError(f"plan rule {text!r}: empty site pattern")
+    m = _POLICY_RE.match(policy)
+    if not m:
+        raise ValueError(f"plan rule {text!r}: cannot parse policy {policy!r}")
+    name = _POLICY_ALIASES.get(m.group(1).lower(), m.group(1).lower())
+    if name not in _POLICY_ARGS:
+        raise ValueError(
+            f"plan rule {text!r}: unknown policy {m.group(1)!r}; "
+            f"have {sorted(_POLICY_ARGS)}"
+        )
+    args = []
+    if m.group(2) and m.group(2).strip():
+        for piece in m.group(2).split(","):
+            if "=" not in piece:
+                raise ValueError(
+                    f"plan rule {text!r}: policy arg {piece.strip()!r} "
+                    "must be key=value"
+                )
+            k, v = piece.split("=", 1)
+            k = k.strip().lower()
+            if k == "ratio":
+                k = "r"
+            if k not in _POLICY_ARGS[name]:
+                raise ValueError(
+                    f"plan rule {text!r}: {name} does not accept arg {k!r} "
+                    f"(allowed: {sorted(_POLICY_ARGS[name])})"
+                )
+            args.append((k, _parse_value(v)))
+    return Rule(pattern, name, tuple(args))
+
+
+_KINDS = ("attn", "swa", "moe", "latt", "xattn", "rec", "ssm", "head")
+
+
+def _pattern_plausible(pattern: str) -> bool:
+    """Could this pattern match a site of SOME architecture?
+
+    Tests the pattern against the universal role and kind/role vocabulary
+    (stage- or path-scoped patterns are arch-specific by construction, so
+    a miss there is reported). Used to tell cross-arch rules from typos.
+    """
+    for r in ROLES:
+        if fnmatchcase(r, pattern):
+            return True
+        for k in _KINDS:
+            if fnmatchcase(f"{k}/{r}", pattern):
+                return True
+    return False
+
+
+def _mesh_data_degree(mesh) -> int:
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    deg = 1
+    for ax in ("pod", "data"):
+        deg *= sizes.get(ax, 1)
+    return deg
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _build_policy(rule: Rule, mesh) -> CompressionPolicy:
+    args = dict(rule.args)
+    if rule.policy_name == "none":
+        return _EXACT
+    if rule.policy_name == "uniform_crs":
+        return UniformCRSPolicy(ratio=float(args.get("r", 1.0 / 512.0)))
+    if rule.policy_name == "compact":
+        return CompActPolicy(ratio=float(args.get("r", 1.0 / 4.0)))
+    # pamm
+    blocks = args.get("blocks", "auto")
+    if blocks == "auto":
+        blocks = _mesh_data_degree(mesh)
+    backend = args.get("backend", "auto")
+    if backend == "auto":
+        backend = _default_backend()
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"pamm backend must be auto|jnp|pallas, got {backend!r}")
+    k_max = args.get("k_max")
+    return PammPolicy(
+        ratio=float(args.get("r", 1.0 / 512.0)),
+        eps=float(args.get("eps", math.inf)),
+        use_kernel=(backend == "pallas"),
+        n_blocks=int(blocks),
+        k_max=None if k_max is None else int(k_max),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """An unresolved plan: an ordered rule list (last match wins)."""
+
+    rules: tuple[Rule, ...] = ()
+    spec: str = ""
+
+    @classmethod
+    def parse(cls, spec: str) -> "CompressionPlan":
+        rules = tuple(
+            _parse_rule(part)
+            for part in spec.split(";")
+            if part.strip()
+        )
+        return cls(rules=rules, spec=spec)
+
+    def resolve(self, cfg, *, mesh=None) -> "ResolvedPlan":
+        """Bind the plan to an architecture (and optionally a mesh).
+
+        Backend choice and shard-local blocking are derived here — from
+        ``jax.default_backend()`` and the mesh's data-parallel degree —
+        instead of being threaded through RunConfig flags.
+        """
+        # build (and thereby validate) each rule's policy exactly once, so a
+        # bad arg fails uniformly on every arch, not only where it matches
+        rule_policies = [_build_policy(rule, mesh) for rule in self.rules]
+        sites = []
+        matched = [False] * len(self.rules)
+        for sid, site in enumerate(enumerate_sites(cfg)):
+            policy = _EXACT
+            for ri, rule in enumerate(self.rules):
+                if site.matches(rule.pattern):
+                    matched[ri] = True
+                    policy = rule_policies[ri]
+            sites.append(
+                CompressedSite(
+                    path=site.path, site_id=sid, policy=policy,
+                    n_in=site.n_in, multiplicity=site.multiplicity,
+                )
+            )
+        for ri, hit in enumerate(matched):
+            # A rule may legitimately miss this architecture (one spec is
+            # shared across archs — ssm.in on a dense model, attn.* on a
+            # pure-SSM model), so only warn when the pattern would not match
+            # ANY site in the universal role/kind vocabulary: that is a typo
+            # that would otherwise silently train uncompressed.
+            if not hit and not _pattern_plausible(self.rules[ri].pattern):
+                warnings.warn(
+                    f"compression rule {self.rules[ri].pattern!r} matches no "
+                    f"site of {getattr(cfg, 'name', '?')} and no known "
+                    f"role (roles: {list(ROLES)})",
+                    stacklevel=2,
+                )
+        return ResolvedPlan(sites=_link_shared_sites(sites), plan=self)
+
+
+def _link_shared_sites(sites: list[CompressedSite]) -> tuple[CompressedSite, ...]:
+    """Mark ffn.up as sharing ffn.gate's compressed state when both sites of
+    a block carry the same non-exact policy (they read the same x — the
+    paper's Fig.-2 sharing). Telemetry and memory reports then attribute
+    the one state to ffn.gate instead of double-counting."""
+    by_path = {s.path: s for s in sites}
+    out = []
+    for s in sites:
+        if s.path.endswith("ffn.up") and not s.is_exact:
+            gate = by_path.get(s.path[: -len("ffn.up")] + "ffn.gate")
+            if gate is not None and gate.policy == s.policy:
+                s = dataclasses.replace(s, shared_with=gate.path)
+        out.append(s)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPlan:
+    """Per-site policies bound to one architecture."""
+
+    sites: tuple[CompressedSite, ...]
+    plan: CompressionPlan | None = None
+
+    def __post_init__(self):
+        lookup = {}
+        for s in self.sites:
+            lookup[s.path] = s
+        object.__setattr__(self, "_lookup", lookup)
+
+    def site(self, stage: int, kind: str, role: str) -> CompressedSite | None:
+        if stage < 0:
+            return self._lookup.get(role)
+        return self._lookup.get(f"stage{stage}.{kind}.{role}")
+
+    def head_site(self) -> CompressedSite | None:
+        return self._lookup.get("lm_head")
+
+    @property
+    def compressed_sites(self) -> tuple[CompressedSite, ...]:
+        return tuple(s for s in self.sites if not s.is_exact)
+
+    def zero_telemetry(self) -> dict[str, jax.Array]:
+        """Fresh telemetry accumulator: one STATS_LEN vector per compressed
+        site. Dict-of-arrays so it can ride a ``lax.scan`` carry. Sites
+        sharing another site's state (shared_with) have no entry — their
+        stats live on the owning site."""
+        return {
+            s.path: jnp.zeros((STATS_LEN,), jnp.float32)
+            for s in self.compressed_sites
+            if s.shared_with is None
+        }
+
+    def ctx(self, stage: int, kind: str, tele: dict | None) -> "SiteCtx":
+        return SiteCtx(self, stage, kind, tele)
+
+    def describe(self) -> str:
+        lines = []
+        for s in self.sites:
+            lines.append(f"{s.path:40s} -> {s.policy.name}"
+                         + ("" if s.is_exact else f" {s.policy}"))
+        return "\n".join(lines)
+
+
+class SiteCtx:
+    """Runtime handle given to a block: site lookup + telemetry recording.
+
+    The telemetry dict is mutated in place during tracing; callers put it
+    on their scan carry so per-layer contributions accumulate. A ``None``
+    resolved plan (or missing site) degrades to exact matmuls — that is
+    the decode/prefill path.
+    """
+
+    __slots__ = ("resolved", "stage", "kind", "tele")
+
+    def __init__(self, resolved: ResolvedPlan | None, stage: int, kind: str,
+                 tele: dict | None):
+        self.resolved = resolved
+        self.stage = stage
+        self.kind = kind
+        self.tele = tele
+
+    def site(self, role: str) -> CompressedSite | None:
+        if self.resolved is None:
+            return None
+        return self.resolved.site(self.stage, self.kind, role)
+
+    def record(self, site: CompressedSite, stats) -> None:
+        if self.tele is not None and stats is not None and site.path in self.tele:
+            self.tele[site.path] = self.tele[site.path] + stats
+
+    def apply(self, role: str, x, w, bias, key):
+        site = self.site(role)
+        if site is None:
+            lead = x.shape[:-1]
+            return _exact_linear(x.reshape(-1, w.shape[0]), w, bias).reshape(
+                *lead, w.shape[1]
+            )
+        z, stats = site.apply(x, w, bias, key)
+        self.record(site, stats)
+        return z
+
+    def apply_shared(self, role: str, x, ws, biases, key):
+        site = self.site(role)
+        if site is None:
+            lead = x.shape[:-1]
+            x2d = x.reshape(-1, ws[0].shape[0])
+            return [
+                _exact_linear(x2d, w, b).reshape(*lead, w.shape[1])
+                for w, b in zip(ws, biases)
+            ]
+        outs, stats = site.apply_shared(x, ws, biases, key)
+        self.record(site, stats)
+        return outs
+
+
+def exact_ctx() -> SiteCtx:
+    """A context that applies every projection exactly (decode/prefill)."""
+    return SiteCtx(None, -1, "head", None)
+
+
+# ---------------------------------------------------------------------------
+# legacy RunConfig shim
+# ---------------------------------------------------------------------------
+def _fmt(v: float) -> str:
+    if v == math.inf:
+        return "inf"
+    return repr(float(v))
+
+
+def plan_spec_from_legacy(rcfg) -> str:
+    """Map the deprecated flat RunConfig knobs onto an equivalent plan spec.
+
+    The five legacy fields (``policy_name``/``pamm_ratio``/``pamm_eps`` plus
+    ``use_kernel``, ``pamm_blocks``, ``pamm_k_max``, ``pamm_on_recurrent``,
+    ``pamm_on_ssm_inproj``) become explicit rules, so the resolved per-site
+    policies are bit-identical to what ``make_run_policy`` + the old
+    ``policy_for`` dispatch produced.
+    """
+    name = getattr(rcfg, "policy_name", "none")
+    if name == "pamm":
+        args = [f"r={_fmt(rcfg.pamm_ratio)}", f"eps={_fmt(rcfg.pamm_eps)}"]
+        args.append(f"backend={'pallas' if rcfg.use_kernel else 'jnp'}")
+        args.append(f"blocks={int(rcfg.pamm_blocks)}")
+        if rcfg.pamm_k_max is not None:
+            args.append(f"k_max={int(rcfg.pamm_k_max)}")
+        expr = "pamm(" + ",".join(args) + ")"
+    elif name in ("uniform_crs", "compact"):
+        expr = f"{name}(r={_fmt(rcfg.pamm_ratio)})"
+    else:
+        expr = "none"
+    if expr == "none":
+        return ""
+    rules = [f"attn.*={expr}"]  # attn.qkv + attn.cross_kv (when present)
+    if getattr(rcfg, "pamm_on_recurrent", False):
+        rules.append(f"rglru.in={expr}")
+    if getattr(rcfg, "pamm_on_ssm_inproj", False):
+        rules.append(f"ssm.in={expr}")
+    return ";".join(rules)
+
+
+def make_run_plan(rcfg) -> CompressionPlan:
+    """The canonical RunConfig -> plan entry point.
+
+    ``rcfg.compression`` (a plan spec string) wins; when empty, the legacy
+    flat flags are translated via :func:`plan_spec_from_legacy`.
+    """
+    spec = getattr(rcfg, "compression", "") or plan_spec_from_legacy(rcfg)
+    return CompressionPlan.parse(spec)
+
+
+def resolved_from_policy(policy: CompressionPolicy, cfg, rcfg) -> ResolvedPlan:
+    """Wrap one legacy global policy object as a resolved plan.
+
+    Reproduces the old ``blocks.policy_for`` dispatch exactly: attention
+    roles get the policy; RG-LRU / SSM inputs only behind their opt-in
+    flags; everything else exact.
+    """
+    on_rec = getattr(rcfg, "pamm_on_recurrent", False)
+    on_ssm = getattr(rcfg, "pamm_on_ssm_inproj", False)
+    exact = isinstance(policy, ExactPolicy)
+    sites = []
+    for sid, site in enumerate(enumerate_sites(cfg)):
+        pol = _EXACT
+        if not exact:
+            if site.role in ("attn.qkv", "attn.cross_kv"):
+                pol = policy
+            elif site.role == "rglru.in" and on_rec:
+                pol = policy
+            elif site.role == "ssm.in" and on_ssm:
+                pol = policy
+        sites.append(
+            CompressedSite(
+                path=site.path, site_id=sid, policy=pol,
+                n_in=site.n_in, multiplicity=site.multiplicity,
+            )
+        )
+    return ResolvedPlan(sites=_link_shared_sites(sites))
+
+
+def as_resolved(plan, cfg, rcfg, *, mesh=None) -> ResolvedPlan:
+    """Normalize anything callers may pass as 'the plan'.
+
+    Accepts a ResolvedPlan, a CompressionPlan, a spec string, a legacy
+    CompressionPolicy object (the deprecated ``make_run_policy`` output),
+    or None (derive from ``rcfg``).
+    """
+    if isinstance(plan, ResolvedPlan):
+        return plan
+    if isinstance(plan, CompressionPlan):
+        return plan.resolve(cfg, mesh=mesh)
+    if isinstance(plan, str):
+        return CompressionPlan.parse(plan).resolve(cfg, mesh=mesh)
+    if plan is None:
+        return make_run_plan(rcfg).resolve(cfg, mesh=mesh)
+    if isinstance(plan, CompressionPolicy):
+        return resolved_from_policy(plan, cfg, rcfg)
+    raise TypeError(f"cannot interpret {type(plan).__name__} as a compression plan")
+
+
+def resolve_for_run(cfg, rcfg, *, mesh=None) -> ResolvedPlan:
+    resolved = make_run_plan(rcfg).resolve(cfg, mesh=mesh)
+    if getattr(rcfg, "moe_token_blocks", 1) > 1:
+        # the blocked (2D DP x EP) MoE dispatch path runs its per-shard vmap
+        # without compression; surface the downgrade HERE, visibly, rather
+        # than only as a trace-time warning buried in jit logs. Only the
+        # sites that live inside moe_ffn are affected — attn.qkv in a
+        # moe-kind block is compressed normally.
+        hot = [
+            s.path for s in resolved.compressed_sites
+            if re.match(r"stage\d+\.moe\.(moe\.expert$|ffn\.)", s.path)
+        ]
+        if hot:
+            warnings.warn(
+                f"moe_token_blocks={rcfg.moe_token_blocks} > 1: the blocked "
+                f"MoE dispatch path does not compress MoE-block sites; "
+                f"{hot} will train exact this run",
+                stacklevel=2,
+            )
+    return resolved

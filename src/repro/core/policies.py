@@ -51,6 +51,15 @@ class CompressionPolicy:
     def stored_elements(self, b: int, n: int) -> int:
         raise NotImplementedError
 
+    def state_stats(self, state: Any, b: int) -> tuple[Any, Any]:
+        """(kept_rows, beta) telemetry read off a compressed state.
+
+        Defaults: every row contributes, no de-bias scaling. Traced values
+        are fine — these feed the per-site train metrics.
+        """
+        del state
+        return float(b), 1.0
+
 
 @dataclasses.dataclass(frozen=True)
 class ExactPolicy(CompressionPolicy):
@@ -115,6 +124,15 @@ class PammPolicy(CompressionPolicy):
     def stored_elements(self, b, n):
         return pamm_lib.stored_elements(b, n, self.k_for(b))
 
+    def state_stats(self, state, b):
+        # alpha != 0 marks rows that CONTRIBUTE to the estimate: survivors
+        # of the eps neighborhood test, excluding all-zero rows (capacity
+        # padding), which can never contribute. kept_frac telemetry is
+        # therefore "contributing fraction", not raw eps survival. Blocked
+        # states carry leading block axes — reductions flatten them.
+        kept = jnp.sum((state.alpha != 0).astype(jnp.float32))
+        return kept, jnp.mean(state.beta)
+
 
 class _CRSState(NamedTuple):
     rows: jax.Array  # (k, n) sampled rows of X
@@ -145,6 +163,10 @@ class UniformCRSPolicy(CompressionPolicy):
 
     def stored_elements(self, b, n):
         return self.k_for(b) * (n + 1)
+
+    def state_stats(self, state, b):
+        k = state.idx.shape[-1]
+        return float(k), b / k
 
 
 class _CompActState(NamedTuple):

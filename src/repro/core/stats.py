@@ -14,7 +14,12 @@ import jax.numpy as jnp
 
 from repro.core.policies import CompressionPolicy
 
-__all__ = ["ActivationReport", "qkv_activation_bytes"]
+__all__ = [
+    "ActivationReport",
+    "qkv_activation_bytes",
+    "site_telemetry_metrics",
+    "plan_activation_report",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,3 +70,53 @@ def qkv_activation_bytes(
         baseline_bytes=baseline,
         compressed_bytes=compressed,
     )
+
+
+# ---------------------------------------------------------------------------
+# per-site telemetry (CompressionPlan runtime metrics)
+# ---------------------------------------------------------------------------
+def site_telemetry_metrics(tele: dict) -> dict:
+    """Flatten a telemetry accumulator (site path -> STATS_LEN vector, see
+    core/linear.py) into scalar train metrics:
+
+      site/<path>/stored_mb   bytes actually saved-for-backward at the site
+      site/<path>/kept_frac   fraction of token rows contributing to the
+                              estimate (eps survivors; all-zero padding
+                              rows, e.g. empty MoE capacity slots, never
+                              contribute and so count against this)
+      site/<path>/beta        mean de-bias factor
+    """
+    out = {}
+    for path, v in tele.items():
+        out[f"site/{path}/stored_mb"] = v[0] / (1024.0 * 1024.0)
+        out[f"site/{path}/kept_frac"] = v[1] / jnp.maximum(v[2], 1.0)
+        out[f"site/{path}/beta"] = v[3] / jnp.maximum(v[4], 1.0)
+    return out
+
+
+def plan_activation_report(resolved, *, batch: int, seq: int,
+                           dtype=jnp.bfloat16) -> list[ActivationReport]:
+    """Analytic stored-bytes report for every compressed site of a resolved
+    CompressionPlan (the plan-level generalization of
+    :func:`qkv_activation_bytes`). Sites backed by a sibling's shared state
+    (``shared_with``, e.g. ffn.up sharing ffn.gate) are skipped so the one
+    state is not double-counted. moe.expert entries are approximate: the
+    runtime compresses experts*capacity rows, not batch*seq."""
+    reports = []
+    for s in resolved.sites:
+        if s.is_exact or s.shared_with is not None:
+            continue
+        reports.append(
+            ActivationReport(
+                policy=f"{s.path}:{s.policy.name}",
+                layers=s.multiplicity,
+                tokens_per_batch=batch * seq,
+                hidden=s.n_in,
+                baseline_bytes=s.multiplicity * batch * seq * s.n_in
+                * jnp.dtype(dtype).itemsize,
+                compressed_bytes=s.multiplicity
+                * s.policy.stored_elements(batch * seq, s.n_in)
+                * jnp.dtype(dtype).itemsize,
+            )
+        )
+    return reports

@@ -35,8 +35,11 @@ def pamm_compress(x, k: int, eps: float, key, *, interpret: bool | None = None) 
     alpha = cs * norm_a / jnp.maximum(jnp.take(norm_c, assign), 1e-20)
     thresh = 1.0 - float(eps) * float(eps) if math.isfinite(eps) else -jnp.inf
     keep = cs * cs >= thresh
-    alpha = jnp.where(keep, alpha, 0.0)
-    beta = b / jnp.maximum(jnp.sum(keep.astype(jnp.float32)), 1.0)
+    # mirror core.pamm: zero rows (padding) count in neither side of beta
+    contributing = keep & (norm_a > 0)
+    alpha = jnp.where(contributing, alpha, 0.0)
+    b_eff = jnp.sum((norm_a > 0).astype(jnp.float32))
+    beta = b_eff / jnp.maximum(jnp.sum(contributing.astype(jnp.float32)), 1.0)
     return PammState(c, alpha, assign, beta.astype(jnp.float32))
 
 

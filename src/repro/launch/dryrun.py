@@ -134,8 +134,11 @@ def kv_multiplier(cfg, mesh) -> int | None:
 def default_runcfg(cfg, mode: str) -> RunConfig:
     big = cfg.param_count() > 5e9
     return RunConfig(
-        policy_name="pamm",
-        pamm_ratio=1.0 / 512.0,
+        # blocks=auto: shard-local PAMM blocking is derived from the mesh's
+        # data-parallel degree at plan resolution (run_cell passes the mesh).
+        # attn.* covers attn.qkv plus attn.cross_kv where present, without
+        # tripping the matches-no-site warning on non-multimodal archs.
+        compression="attn.*=pamm(r=1/512,eps=inf,blocks=auto,backend=auto)",
         compute_dtype="bfloat16",
         param_dtype="bfloat16" if big else "float32",
         remat="pamm" if mode == "train" else "none",
@@ -192,7 +195,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True,
     param_sh = sh.sanitize_shardings(param_sh, shapes_tree, mesh)
 
     t0 = time.monotonic()
-    with jax.set_mesh(mesh):
+    set_mesh = getattr(jax, "set_mesh", None)
+    mesh_ctx = set_mesh(mesh) if set_mesh is not None else mesh
+    with mesh_ctx:
         if mode == "train":
             opt_init, _ = make_optimizer(rcfg.optimizer)
             opt_shapes = jax.eval_shape(opt_init, shapes_tree)
@@ -205,7 +210,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True,
             state_sh = TrainState(params=param_sh, opt=opt_sh)
             batch_specs = make_batch_specs(cfg, seq_len, global_batch, mode="train")
             batch_sh = sh.batch_shardings(batch_specs, mesh)
-            step_fn = make_train_step(cfg, rcfg, total_steps=10000)
+            step_fn = make_train_step(cfg, rcfg, total_steps=10000, mesh=mesh)
             jitted = jax.jit(
                 step_fn,
                 in_shardings=(state_sh, batch_sh, sh.replicated(mesh)),
@@ -265,8 +270,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True,
         compiled = lowered.compile()
         t_compile = time.monotonic() - t0
 
+    from repro.launch import hlo_cost as _hlo_cost
+
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _hlo_cost.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     if save_hlo:
         import gzip

@@ -44,7 +44,7 @@ _ATTR_COMP = re.compile(
     r"(?:body|condition|true_computation|false_computation|called_computations)"
     r"=%?([\w.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
-_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 _FREE_OPS = {
@@ -96,6 +96,7 @@ class Instr:
     op: str
     result_type: str
     operand_names: list[str]
+    operand_inline_types: list[str]  # "" when the dump omits operand types
     line: str
 
 
@@ -104,6 +105,52 @@ class Computation:
     name: str
     instrs: list[Instr]
     types: dict[str, str]  # instruction name -> result type string
+
+
+def _split_operands(inner: str) -> list[str]:
+    """Split an operand list at top-level commas (layouts like ``{1,0}`` and
+    shapes like ``[4,4]`` contain commas that must not split)."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(inner[start:i])
+            start = i + 1
+    tail = inner[start:]
+    if tail.strip():
+        out.append(tail)
+    return out
+
+
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_operand(piece: str) -> tuple[str | None, str]:
+    """One operand -> (instruction name, inline type string or '').
+
+    New-style dumps write ``f32[128,256]{1,0} %Arg_0.1``; old-style ``%x`` or
+    bare ``x``. Without this, the dtype token (``f32``) is mistaken for the
+    operand name and every type lookup misses — the bug behind k=1 dot flops.
+    """
+    piece = piece.strip()
+    if not piece:
+        return None, ""
+    m = _OPERAND_NAME.search(piece)
+    if m:
+        name = m.group(1)
+        ty = piece[: m.start()].strip()
+        return name, ty if _SHAPE_RE.search(ty) else ""
+    # bare name, possibly preceded by a type
+    toks = re.findall(r"[A-Za-z_][\w.\-]*(?:\[[0-9,]*\])?(?:\{[^}]*\})?", piece)
+    if not toks:
+        return None, ""
+    name_tok = toks[-1]
+    name = re.match(r"[A-Za-z_][\w.\-]*", name_tok).group(0)
+    ty = piece[: piece.rfind(name_tok)].strip()
+    return name, ty if _SHAPE_RE.search(ty) else ""
 
 
 def parse_computations(text: str):
@@ -150,7 +197,7 @@ def parse_computations(text: str):
         cut = rest.find("(")
         op = (rest if cut < 0 else rest[:cut]).strip()
         # first-level parenthesized operand list
-        operands = []
+        operands, inline_types = [], []
         if cut >= 0:
             depth, end = 0, cut
             for i in range(cut, len(rest)):
@@ -162,9 +209,13 @@ def parse_computations(text: str):
                         end = i
                         break
             inner = rest[cut + 1 : end]
-            for tok in re.findall(r"%?([A-Za-z_][\w.\-]*)", inner):
-                operands.append(tok)
-        cur.instrs.append(Instr(name, op, result_type, operands, line))
+            for piece in _split_operands(inner):
+                nm, ty = _parse_operand(piece)
+                if nm is None:
+                    continue
+                operands.append(nm)
+                inline_types.append(ty)
+        cur.instrs.append(Instr(name, op, result_type, operands, inline_types, line))
         cur.types[name] = result_type
     return comps, entry
 
@@ -240,7 +291,10 @@ def analyze(text: str, *, fusion_model: bool = True, breakdown: bool = False) ->
                     _acc(total, comp_cost(sub))
                 continue
 
-            operand_types = [comp.types.get(o, "") for o in ins.operand_names]
+            operand_types = [
+                comp.types.get(o, "") or it
+                for o, it in zip(ins.operand_names, ins.operand_inline_types)
+            ]
             result_bytes = _bytes_of(ins.result_type)
             label = None
 
@@ -319,6 +373,18 @@ def analyze(text: str, *, fusion_model: bool = True, breakdown: bool = False) ->
     out["unknown_trip_count_loops"] = unknown_loops
     out["total_collective_bytes"] = sum(result["coll_bytes"].values())
     return out
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older releases return a one-element list of per-module dicts; newer ones
+    return the dict directly. Always returns a (possibly empty) dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
 
 
 def top_contributors(text: str, n: int = 20) -> dict:

@@ -34,8 +34,13 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--policy", default="pamm",
-                    choices=["pamm", "uniform_crs", "compact", "none"])
+                    choices=["pamm", "uniform_crs", "compact", "none"],
+                    help="legacy single-policy shorthand (see --compression)")
     ap.add_argument("--ratio", type=float, default=512, help="compression divisor r=1/x")
+    ap.add_argument("--compression", default="",
+                    help="CompressionPlan spec, e.g. "
+                         "'attn.qkv=pamm(r=1/512);ffn.*=compact(r=1/4)'; "
+                         "overrides --policy/--ratio (DESIGN.md §2)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -46,13 +51,14 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     rcfg = RunConfig(
+        compression=args.compression,
         policy_name=args.policy, pamm_ratio=1.0 / args.ratio, lr=args.lr,
         compute_dtype="float32", param_dtype="float32",
     )
     stream = SyntheticStream.for_arch(cfg, args.seq_len, args.global_batch)
     state, specs = init_train_state(cfg, rcfg, jax.random.key(rcfg.seed))
-    step_fn = make_train_step(cfg, rcfg, total_steps=args.steps)
 
+    mesh = None
     if args.data_model:
         mesh = make_debug_mesh(*args.data_model)
         param_sh = sh.spec_tree_to_shardings(specs, mesh)
@@ -60,6 +66,9 @@ def main(argv=None):
             params=jax.device_put(state.params, param_sh),
             opt=state.opt,
         )
+    # plan resolution sees the mesh: shard-local PAMM blocking (blocks=auto)
+    # and backend selection are derived here, not threaded as flags.
+    step_fn = make_train_step(cfg, rcfg, total_steps=args.steps, mesh=mesh)
     step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     holder = {"state": state, "metrics": None}

@@ -14,9 +14,11 @@ query blocks of ``chunk`` rows (FlashAttention-style memory behaviour; the
 Pallas kernel in kernels/flash_attention.py is the TPU-optimized version
 and uses this code path's math as its oracle).
 
-PAMM hooks: the Q/K/V projections run through
-``core.linear.compressed_linear_shared`` — one compressed state per layer
-backs all three weight gradients (paper Fig. 2).
+PAMM hooks: the Q/K/V projections run through the ``attn.qkv`` site of the
+run's CompressionPlan (``SiteCtx.apply_shared``) — one compressed state per
+layer backs all three weight gradients (paper Fig. 2). Cross-attention K/V
+are the separate ``attn.cross_kv`` site; its PRNG stream is derived from
+the site id (core/linear.py), not an ad-hoc ``fold_in(key, 1)``.
 """
 from __future__ import annotations
 
@@ -25,8 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import compressed_linear_shared
-from repro.core.policies import CompressionPolicy
+from repro.core.plan import SiteCtx, exact_ctx
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
 
 NEG_INF = -1e30
@@ -70,22 +71,22 @@ def init_attention(key, cfg, dtype, *, cross: bool = False, n_kv_eff: int | None
     return params, specs
 
 
-def _project_qkv(params, x, kv_src, policy: CompressionPolicy, key, cfg, n_kv_eff):
+def _project_qkv(params, x, kv_src, ctx: SiteCtx, key, cfg, n_kv_eff):
     """Q from x; K,V from kv_src (== x for self-attn). Shared PAMM state."""
     dh = cfg.head_dim
     h = params["wq"].shape[1] // dh
     kv = params["wk"].shape[1] // dh
     biases = [params.get("bq"), params.get("bk"), params.get("bv")]
     if kv_src is x:
-        q, k, v = compressed_linear_shared(
-            x, [params["wq"], params["wk"], params["wv"]], biases, key, policy
+        q, k, v = ctx.apply_shared(
+            "attn.qkv", x, [params["wq"], params["wk"], params["wv"]], biases, key
         )
     else:
-        # cross-attention: queries from text stream, keys/values from images.
-        (q,) = compressed_linear_shared(x, [params["wq"]], [biases[0]], key, policy)
-        k2key = None if key is None else jax.random.fold_in(key, 1)
-        k, v = compressed_linear_shared(
-            kv_src, [params["wk"], params["wv"]], biases[1:], k2key, policy
+        # cross-attention: queries from text stream, keys/values from images;
+        # two distinct sites, so their PRNG streams separate via site_id.
+        (q,) = ctx.apply_shared("attn.qkv", x, [params["wq"]], [biases[0]], key)
+        k, v = ctx.apply_shared(
+            "attn.cross_kv", kv_src, [params["wk"], params["wv"]], biases[1:], key
         )
     q = q.reshape(*x.shape[:-1], h, dh)
     k = k.reshape(*kv_src.shape[:-1], kv, dh)
@@ -179,10 +180,10 @@ def cache_insert(cache: KVCache, k_new, v_new, positions) -> KVCache:
 # ---------------------------------------------------------------------------
 # block-level entry points
 # ---------------------------------------------------------------------------
-def attn_train(params, x, positions, cfg, policy, key, *, window: int, chunk: int,
+def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
                flash_sdp: bool = True):
     """Self-attention over a full sequence (training / prefill math)."""
-    q, k, v = _project_qkv(params, x, x, policy, key, cfg, None)
+    q, k, v = _project_qkv(params, x, x, ctx, key, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     sdp = lambda q_, k_, v_: sdpa(
@@ -199,9 +200,7 @@ def attn_train(params, x, positions, cfg, policy, key, *, window: int, chunk: in
 
 def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int):
     """One-step decode: x (B, 1, d), positions (B, 1) absolute."""
-    from repro.core.policies import ExactPolicy
-
-    q, k, v = _project_qkv(params, x, x, ExactPolicy(), None, cfg, None)
+    q, k, v = _project_qkv(params, x, x, exact_ctx(), None, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     cache = cache_insert(cache, k, v, positions)
@@ -213,10 +212,10 @@ def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int):
     return out @ params["wo"].astype(x.dtype), cache
 
 
-def cross_attn(params, x, image_embeds, cfg, policy, key, *, chunk: int,
+def cross_attn(params, x, image_embeds, cfg, ctx, key, *, chunk: int,
                flash_sdp: bool = True):
     """Cross-attention (no RoPE, non-causal) with tanh gate. Train/prefill."""
-    q, k, v = _project_qkv(params, x, image_embeds, policy, key, cfg, None)
+    q, k, v = _project_qkv(params, x, image_embeds, ctx, key, cfg, None)
     B, Lq = x.shape[0], x.shape[1]
     Lk = image_embeds.shape[1]
     qpos = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32), (B, Lq))
@@ -231,8 +230,6 @@ def cross_attn(params, x, image_embeds, cfg, policy, key, *, chunk: int,
 
 def cross_attn_decode(params, x, kv_cached, cfg):
     """Decode-time cross-attention against cached image K/V."""
-    from repro.core.policies import ExactPolicy
-
     k, v = kv_cached
     dh = cfg.head_dim
     h = params["wq"].shape[1] // dh

@@ -6,20 +6,23 @@ Each kind implements:
   block_prefill(...)                                 -> (x, cache, aux)
   block_decode(...)(params, x, pos, cache, ...)      -> (x, cache)
   init_block_cache(kind, cfg, B, max_len, dtype)     -> cache pytree
+
+Compression is no longer a single global policy: ``block_train`` receives
+a ``SiteCtx`` (core/plan.py) which resolves each projection *role*
+(attn.qkv, ffn.gate, ssm.in, ...) to that site's policy and accumulates
+per-site telemetry. The old ``policy_for`` kind-level dispatch lives on
+only inside the legacy-RunConfig shim (plan.resolved_from_policy).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import CompressionPolicy, ExactPolicy
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import P, ffn, init_ffn, init_rms_norm, rms_norm
-
-_EXACT = ExactPolicy()
+from repro.models.layers import P, ffn, ffn_sites, init_ffn, init_rms_norm, rms_norm
 
 
 def _window_for(kind: str, cfg) -> int:
@@ -28,17 +31,6 @@ def _window_for(kind: str, cfg) -> int:
     if kind == "latt":
         return cfg.local_window
     return 0
-
-
-def policy_for(kind: str, rcfg, policy: CompressionPolicy) -> CompressionPolicy:
-    """Which projections get compressed, per DESIGN.md §4."""
-    if kind in ("attn", "swa", "moe", "latt", "xattn"):
-        return policy
-    if kind == "rec":
-        return policy if rcfg.pamm_on_recurrent else _EXACT
-    if kind == "ssm":
-        return policy if rcfg.pamm_on_ssm_inproj else _EXACT
-    raise ValueError(kind)
 
 
 # ---------------------------------------------------------------------------
@@ -82,16 +74,15 @@ def init_block(kind: str, cfg, key, dtype, *, n_kv_eff: int | None = None,
 # ---------------------------------------------------------------------------
 # train / prefill / decode
 # ---------------------------------------------------------------------------
-def block_train(kind, cfg, rcfg, policy, params, x, positions, extras, key, aux,
+def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
                 *, want_cache: bool = False, max_len: int = 0):
-    """Returns (x, aux, cache_or_None)."""
-    pol = policy_for(kind, rcfg, policy)
+    """Returns (x, aux, cache_or_None). ``ctx`` is this block's SiteCtx."""
     cache = None
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
 
     if kind in ("attn", "swa", "latt", "moe"):
         out, (k_roped, v) = attn_lib.attn_train(
-            params["attn"], h, positions, cfg, pol, key,
+            params["attn"], h, positions, cfg, ctx, key,
             window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
             flash_sdp=rcfg.flash_sdp,
         )
@@ -107,32 +98,35 @@ def block_train(kind, cfg, rcfg, policy, params, x, positions, extras, key, aux,
         if kind == "moe":
             out2, a = moe_lib.moe_ffn(params["ffn"], h2, cfg,
                                       gather_dispatch=rcfg.moe_gather_dispatch,
-                                      token_blocks=rcfg.moe_token_blocks)
+                                      token_blocks=rcfg.moe_token_blocks,
+                                      ctx=ctx, key=key)
             aux = aux + a
         else:
-            out2 = ffn(params["ffn"], h2)
+            out2 = ffn_sites(params["ffn"], h2, ctx, key)
         x = x + out2
 
     elif kind == "xattn":
         out, (k_img, v_img) = attn_lib.cross_attn(
-            params["attn"], h, extras["image_embeds"], cfg, pol, key,
+            params["attn"], h, extras["image_embeds"], cfg, ctx, key,
             chunk=rcfg.attn_chunk, flash_sdp=rcfg.flash_sdp,
         )
         x = x + out
         if want_cache:
             cache = (k_img, v_img)
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
-        x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn(params["ffn"], h2)
+        x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn_sites(
+            params["ffn"], h2, ctx, key
+        )
 
     elif kind == "rec":
-        res = rglru_lib.rglru_train(params["rec"], h, cfg, pol, key, return_cache=want_cache)
+        res = rglru_lib.rglru_train(params["rec"], h, cfg, ctx, key, return_cache=want_cache)
         out, cache = res if want_cache else (res, None)
         x = x + out
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
-        x = x + ffn(params["ffn"], h2)
+        x = x + ffn_sites(params["ffn"], h2, ctx, key)
 
     elif kind == "ssm":
-        res = ssm_lib.ssm_train(params["ssm"], h, cfg, pol, key, return_cache=want_cache)
+        res = ssm_lib.ssm_train(params["ssm"], h, cfg, ctx, key, return_cache=want_cache)
         out, cache = res if want_cache else (res, None)
         x = x + out
     else:

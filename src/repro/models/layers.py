@@ -82,6 +82,29 @@ def ffn(params, x):
     return h @ params["w_down"].astype(x.dtype)
 
 
+def ffn_sites(params, x, ctx, key):
+    """SwiGLU FFN with gate/up/down as first-class compression sites.
+
+    ``ctx`` is a plan SiteCtx (core/plan.py); with every role exact this is
+    bit-identical to :func:`ffn`. Gate and up read the same x, so when both
+    resolve to the same policy ONE compressed state backs both weight
+    gradients (the paper's Fig.-2 sharing; telemetry lands on ffn.gate).
+    """
+    gate_site = ctx.site("ffn.gate")
+    up_site = ctx.site("ffn.up")
+    if (gate_site is not None and up_site is not None
+            and up_site.shared_with == gate_site.path):
+        (g, u), stats = gate_site.apply_shared(
+            x, [params["w_gate"], params["w_up"]], [None, None], key
+        )
+        ctx.record(gate_site, stats)
+    else:
+        g = ctx.apply("ffn.gate", x, params["w_gate"], None, key)
+        u = ctx.apply("ffn.up", x, params["w_up"], None, key)
+    h = jax.nn.silu(g) * u
+    return ctx.apply("ffn.down", h, params["w_down"], None, key)
+
+
 # ---------------------------------------------------------------------------
 # causal depthwise conv (width w), used by mamba2 and RG-LRU branches
 # ---------------------------------------------------------------------------
@@ -111,13 +134,19 @@ def init_depthwise_conv(key, width: int, channels: int, dtype):
 # chunked softmax cross-entropy (vocab-parallel friendly)
 # ---------------------------------------------------------------------------
 def chunked_cross_entropy(h, w_head, labels, mask, chunk: int,
-                          valid_vocab: int | None = None):
+                          valid_vocab: int | None = None,
+                          site=None, key=None):
     """Mean token NLL without materializing (B, L, V) at once.
 
     h: (B, L, d) final hidden states; w_head: (d, V); labels: (B, L) int32;
     mask: (B, L) {0,1} float. Scans over sequence chunks; inside each chunk
     logits are (B, chunk, V) — with V sharded over 'model' this is the
     standard Megatron vocab-parallel cross-entropy pattern under GSPMD.
+
+    ``site``/``key``: the plan's ``lm_head`` compression site. When given
+    (and not exact), each chunk's hidden states are compressed for the
+    head's weight gradient, and the call returns ``(loss, stats)`` with the
+    site telemetry accumulated over chunks; otherwise returns ``loss``.
     """
     B, L, d = h.shape
     chunk = min(chunk, L)
@@ -132,18 +161,32 @@ def chunked_cross_entropy(h, w_head, labels, mask, chunk: int,
     mc = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
 
     v_total = w_head.shape[1]
+    compressed = site is not None and not site.is_exact
 
     def body(carry, xs):
-        tot_nll, tot_cnt = carry
+        tot_nll, tot_cnt, idx, stats_acc = carry
         hb, lb, mb = xs
-        logits = (hb @ w_head.astype(hb.dtype)).astype(jnp.float32)  # (B, chunk, V)
+        if compressed:
+            z, stats = site.apply(hb, w_head, None, jax.random.fold_in(key, idx))
+            logits = z.astype(jnp.float32)
+            stats_acc = stats_acc + stats
+        else:
+            logits = (hb @ w_head.astype(hb.dtype)).astype(jnp.float32)
         if valid_vocab is not None and valid_vocab < v_total:
             col = jnp.arange(v_total)
             logits = jnp.where(col[None, None, :] < valid_vocab, logits, -1e30)
         logz = jax.scipy.special.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
         nll = (logz - gold) * mb
-        return (tot_nll + jnp.sum(nll), tot_cnt + jnp.sum(mb)), None
+        return (tot_nll + jnp.sum(nll), tot_cnt + jnp.sum(mb),
+                idx + 1, stats_acc), None
 
-    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc, mc))
-    return tot / jnp.maximum(cnt, 1.0)
+    from repro.core.linear import STATS_LEN
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.int32(0),
+            jnp.zeros((STATS_LEN,), jnp.float32))
+    (tot, cnt, _, stats), _ = jax.lax.scan(body, init, (hc, lc, mc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if site is not None:
+        return loss, stats
+    return loss

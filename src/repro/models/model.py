@@ -3,10 +3,14 @@
 Public API (all pure functions over plain pytrees):
 
   init_model(cfg, rcfg, key, n_kv_eff=None)       -> (params, specs)
-  loss_fn(cfg, rcfg, policy, params, batch, key)  -> (loss, metrics)
-  forward(cfg, rcfg, policy, params, batch, key)  -> (hidden, aux)
+  loss_fn(cfg, rcfg, plan, params, batch, key)    -> (loss, metrics)
+  forward(cfg, rcfg, plan, params, batch, key)    -> (hidden, aux)
   prefill(cfg, rcfg, params, batch, max_len)      -> (logits_last, caches)
   decode_step(cfg, rcfg, params, tokens, pos, caches, extras) -> (logits, caches)
+
+``plan`` is anything ``core.plan.as_resolved`` accepts: a spec string, a
+CompressionPlan, a ResolvedPlan, None (derive from ``rcfg``), or — the
+deprecated path — a single CompressionPolicy from :func:`make_run_policy`.
 
 ``batch``: dict with 'tokens' (B, L) int32 (or 'embeds' (B, L, d) when
 cfg.embed_inputs), 'labels', optional 'mask', optional 'image_embeds'
@@ -20,7 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import CompressionPolicy, ExactPolicy, make_policy
+from repro.core import plan as plan_lib
+from repro.core.policies import CompressionPolicy, make_policy
 from repro.models import blocks as blk
 from repro.models.layers import P, chunked_cross_entropy, embed_init, init_rms_norm, rms_norm
 
@@ -31,6 +36,13 @@ __all__ = [
 
 
 def make_run_policy(rcfg) -> CompressionPolicy:
+    """DEPRECATED: the single global policy of the flat-RunConfig era.
+
+    Still honored everywhere a plan is accepted (the object is wrapped by
+    ``core.plan.resolved_from_policy``, reproducing the old kind-level
+    dispatch bit-for-bit). New code should set ``rcfg.compression`` to a
+    plan spec — see core/plan.py and DESIGN.md §2.
+    """
     if rcfg.policy_name == "pamm":
         return make_policy(
             "pamm", ratio=rcfg.pamm_ratio, eps=rcfg.pamm_eps,
@@ -142,27 +154,37 @@ def _extras(cfg, batch, cdt):
 # ---------------------------------------------------------------------------
 # staged forward (training / scoring)
 # ---------------------------------------------------------------------------
-def forward(cfg, rcfg, policy, params, batch, key):
-    """Returns (hidden (B, L, d), aux_loss)."""
+def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = None):
+    """Returns (hidden (B, L, d), aux_loss).
+
+    ``plan``: see module docstring. ``telemetry``: pass a dict to receive
+    per-site stats vectors (site path -> STATS_LEN array) accumulated over
+    all layers — they ride the layer-scan carries, so they are valid
+    tracers in the caller's trace.
+    """
+    resolved = plan_lib.as_resolved(plan, cfg, rcfg)
     cdt, _ = _dtype(rcfg)
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
     extras = _extras(cfg, batch, cdt)
     aux = jnp.float32(0)
+    tele = resolved.zero_telemetry()
 
     for si, (unit, rep) in enumerate(cfg.stages):
         unit_params = params["stages"][si]
         stage_key = jax.random.fold_in(key, si)
 
-        def body(carry, xs):
-            x_c, aux_c = carry
+        def body(carry, xs, si=si):
+            x_c, aux_c, tele_c = carry
             bparams, k_r = xs
             for bi, kind in enumerate(unit):
+                ctx = resolved.ctx(si, kind, tele_c)
                 x_c, aux_c, _ = blk.block_train(
-                    kind, cfg, rcfg, policy, bparams[bi], x_c, positions, extras,
+                    kind, cfg, rcfg, ctx, bparams[bi], x_c, positions, extras,
                     jax.random.fold_in(k_r, bi), aux_c,
                 )
+                tele_c = ctx.tele
                 if rcfg.seq_shard:
                     # Megatron sequence parallelism: between blocks the
                     # residual stream is sharded over (batch, seq->model);
@@ -170,7 +192,7 @@ def forward(cfg, rcfg, policy, params, batch, key):
                     from repro.runtime.sharding import maybe_constrain
 
                     x_c = maybe_constrain(x_c, ("batch", "ffn", None))
-            return (x_c, aux_c), None
+            return (x_c, aux_c, tele_c), None
 
         if rcfg.remat == "full":
             body = jax.checkpoint(body, prevent_cse=False)
@@ -185,36 +207,62 @@ def forward(cfg, rcfg, policy, params, batch, key):
 
         keys = jax.random.split(stage_key, rep)
         if rep > 1:
-            (x, aux), _ = jax.lax.scan(body, (x, aux), (unit_params, keys))
+            (x, aux, tele), _ = jax.lax.scan(body, (x, aux, tele), (unit_params, keys))
         else:
             sliced = jax.tree.map(lambda t: t[0], unit_params)
-            (x, aux), _ = body((x, aux), (sliced, keys[0]))
+            (x, aux, tele), _ = body((x, aux, tele), (sliced, keys[0]))
 
+    if telemetry is not None:
+        telemetry.update(tele)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, aux
 
 
-def loss_fn(cfg, rcfg, policy, params, batch, key):
+def loss_fn(cfg, rcfg, plan, params, batch, key):
+    resolved = plan_lib.as_resolved(plan, cfg, rcfg)
     cdt, _ = _dtype(rcfg)
-    h, aux = forward(cfg, rcfg, policy, params, batch, key)
+    tele: dict = {}
+    h, aux = forward(cfg, rcfg, resolved, params, batch, key, telemetry=tele)
     labels = batch["labels"]
     mask = batch.get("mask")
     if mask is None:
         mask = jnp.ones(labels.shape[:2], jnp.float32)
+
+    head_site = resolved.head_site()
+    if head_site is not None and head_site.is_exact:
+        head_site = None
+    head_key = jax.random.fold_in(key, 0x1EAD)
+    head_stats = None
     if cfg.n_codebooks:
         v = cfg.vocab_size
         nll = jnp.float32(0)
         for c in range(cfg.n_codebooks):
             w_c = params["head"][:, c * v : (c + 1) * v]
-            nll = nll + chunked_cross_entropy(h, w_c, labels[..., c], mask, rcfg.loss_chunk)
+            res = chunked_cross_entropy(
+                h, w_c, labels[..., c], mask, rcfg.loss_chunk,
+                site=head_site, key=jax.random.fold_in(head_key, c),
+            )
+            if head_site is not None:
+                nll_c, stats = res
+                head_stats = stats if head_stats is None else head_stats + stats
+                nll = nll + nll_c
+            else:
+                nll = nll + res
         nll = nll / cfg.n_codebooks
     else:
-        nll = chunked_cross_entropy(h, params["head"], labels, mask, rcfg.loss_chunk,
-                                    valid_vocab=cfg.vocab_size)
+        res = chunked_cross_entropy(h, params["head"], labels, mask, rcfg.loss_chunk,
+                                    valid_vocab=cfg.vocab_size,
+                                    site=head_site, key=head_key)
+        if head_site is not None:
+            nll, head_stats = res
+        else:
+            nll = res
+    if head_site is not None and head_stats is not None:
+        tele[head_site.path] = tele.get(head_site.path, 0) + head_stats
     moe_coef = 0.01 if cfg.n_experts else 0.0
     total_layers = max(1, cfg.n_layers)
     loss = nll + moe_coef * aux / total_layers
-    return loss, {"nll": nll, "aux": aux}
+    return loss, {"nll": nll, "aux": aux, "sites": tele}
 
 
 # ---------------------------------------------------------------------------
@@ -247,7 +295,7 @@ def cache_logical_specs(cfg, *, shard_cache_seq: bool = False):
 def prefill(cfg, rcfg, params, batch, max_len: int):
     """Run the prompt, build caches sized ``max_len``. Returns (logits, caches)."""
     cdt, _ = _dtype(rcfg)
-    policy = ExactPolicy()
+    ctx = plan_lib.exact_ctx()
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
@@ -264,7 +312,7 @@ def prefill(cfg, rcfg, params, batch, max_len: int):
             a = jnp.float32(0)
             for bi, kind in enumerate(unit):
                 x_c, a, cache = blk.block_train(
-                    kind, cfg, rcfg, policy, bparams[bi], x_c, positions, extras,
+                    kind, cfg, rcfg, ctx, bparams[bi], x_c, positions, extras,
                     key, a, want_cache=True, max_len=max_len,
                 )
                 outs.append(cache)

@@ -63,8 +63,14 @@ def init_moe(key, cfg, dtype, *, e_pad: int = 0):
 
 
 def moe_ffn(params, x, cfg, *, gather_dispatch: bool = True,
-            token_blocks: int = 1):
+            token_blocks: int = 1, ctx=None, key=None):
     """x: (B, L, d) or (T, d). Returns (out, aux_loss).
+
+    ``ctx``/``key`` (a plan SiteCtx + block PRNG key) enable the
+    ``moe.expert`` compression site: per-expert compressed states back the
+    gate/up weight gradients (CompAct-style whole-network compression under
+    one API). The blocked (token_blocks > 1) 2D-layout path keeps exact
+    experts — its per-shard vmap already owns the token axis.
 
     gather_dispatch=True (§Perf): the (ep*cap, d) expert buffer is built by
     GATHERING rows through a scattered int32 slot->token index map instead
@@ -85,16 +91,31 @@ def moe_ffn(params, x, cfg, *, gather_dispatch: bool = True,
     x2d = x.reshape(-1, d)
     t = x2d.shape[0]
     if token_blocks > 1 and t % token_blocks == 0:
+        if ctx is not None:
+            hot = [
+                r for r in ("moe.expert", "ffn.gate", "ffn.up", "ffn.down")
+                if (s := ctx.site(r)) is not None and not s.is_exact
+            ]
+            if hot:
+                import warnings
+
+                warnings.warn(
+                    f"compression sites {hot} are not applied on the blocked "
+                    f"(moe_token_blocks={token_blocks}) MoE dispatch path; "
+                    "they train exact for this run", stacklevel=2,
+                )
         from repro.runtime.sharding import maybe_constrain
 
         xb = x2d.reshape(token_blocks, t // token_blocks, d)
         xb = maybe_constrain(xb, ("batch", None, None))
         # spmd_axis_name pins the vmapped shard dim onto the data axes so
         # the per-block buffers/einsums partition S -> data, ep -> model.
+        from repro.runtime.sharding import current_mesh_axis_names
+
         spmd_axes = None
-        am = jax.sharding.get_abstract_mesh()
-        if am is not None and not am.empty:
-            axes = tuple(a for a in ("pod", "data") if a in am.axis_names)
+        mesh_axes = current_mesh_axis_names()
+        if mesh_axes:
+            axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
             spmd_axes = axes if len(axes) > 1 else (axes[0] if axes else None)
         outs, auxs = jax.vmap(
             lambda xs: _moe_tokens(params, xs, cfg, gather_dispatch, blocked=True),
@@ -102,11 +123,12 @@ def moe_ffn(params, x, cfg, *, gather_dispatch: bool = True,
         )(xb)
         outs = maybe_constrain(outs, ("batch", None, None))
         return outs.reshape(*lead, d), jnp.mean(auxs)
-    out, aux = _moe_tokens(params, x2d, cfg, gather_dispatch)
+    out, aux = _moe_tokens(params, x2d, cfg, gather_dispatch, ctx=ctx, key=key)
     return out.reshape(*lead, d), aux
 
 
-def _moe_tokens(params, x2d, cfg, gather_dispatch: bool, *, blocked: bool = False):
+def _moe_tokens(params, x2d, cfg, gather_dispatch: bool, *, blocked: bool = False,
+                ctx=None, key=None):
     """Dispatch/compute/combine for one flat block of tokens (T, d)."""
     d = x2d.shape[-1]
     t = x2d.shape[0]
@@ -161,8 +183,19 @@ def _moe_tokens(params, x2d, cfg, gather_dispatch: bool, *, blocked: bool = Fals
         buf = buf.reshape(ep, cap, d)
 
     # --- batched expert SwiGLU (experts sharded over 'model') ---
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype)))
-    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype))
+    site = ctx.site("moe.expert") if (ctx is not None and key is not None) else None
+    if site is not None and not site.is_exact:
+        # moe.expert site: one compressed state per expert buffer, shared by
+        # the gate and up projections (the Fig.-2 sharing, per expert); the
+        # down projection's input is the post-SwiGLU hidden, kept exact.
+        (zg, zu), stats = site.apply_batched(
+            buf, [params["w_gate"], params["w_up"]], key
+        )
+        ctx.record(site, stats)
+        h = jax.nn.silu(zg) * zu
+    else:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype))
     h = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(buf.dtype))
     h_flat = h.reshape(ep * cap, d)
 
@@ -175,5 +208,10 @@ def _moe_tokens(params, x2d, cfg, gather_dispatch: bool, *, blocked: bool = Fals
     )
 
     if cfg.n_shared_experts:
-        out = out + ffn(params["shared"], x2d)
+        if ctx is not None and key is not None:
+            from repro.models.layers import ffn_sites
+
+            out = out + ffn_sites(params["shared"], x2d, ctx, key)
+        else:
+            out = out + ffn(params["shared"], x2d)
     return out, aux

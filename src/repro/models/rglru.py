@@ -17,8 +17,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import compressed_linear
-from repro.core.policies import CompressionPolicy, ExactPolicy
 from repro.models.layers import P, causal_depthwise_conv, dense_init
 
 _C = 8.0
@@ -65,11 +63,11 @@ def _gates(params, xb):
     return a, gated_in
 
 
-def rglru_train(params, x, cfg, policy: CompressionPolicy, key, *, return_cache=False):
-    """x: (B, L, d_model)."""
-    pol = policy if getattr(policy, "name", "none") != "none" else ExactPolicy()
+def rglru_train(params, x, cfg, ctx, key, *, return_cache=False):
+    """x: (B, L, d_model). The ``rglru.in`` site compresses the recurrent
+    branch's input projection (w_x)."""
     y_side = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
-    xb = compressed_linear(x, params["w_x"], None, key, pol)
+    xb = ctx.apply("rglru.in", x, params["w_x"], None, key)
     xb, conv_state = causal_depthwise_conv(xb, params["conv_w"])
     a, b = _gates(params, xb)
 

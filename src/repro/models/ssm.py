@@ -7,8 +7,9 @@ contraction, MXU-friendly) plus the low-rank state pass-through. Decode is
 the O(1)-per-token recurrence h <- h*exp(dt·A) + dt·B⊗x.
 
 Attention-free: there are no Q/K/V projections, so PAMM is *inapplicable*
-by default (DESIGN.md §4). The optional ``pamm_on_ssm_inproj`` run flag
-extends PAMM to the in-projection (the analogous Xᵀ∇Z memory hog).
+by default (DESIGN.md §4). The in-projection (the analogous Xᵀ∇Z memory
+hog) is the ``ssm.in`` compression site — enable it from a plan spec
+(``ssm.in=pamm(...)``) or the legacy ``pamm_on_ssm_inproj`` flag.
 """
 from __future__ import annotations
 
@@ -18,8 +19,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import compressed_linear
-from repro.core.policies import CompressionPolicy, ExactPolicy
 from repro.models.layers import P, causal_depthwise_conv, dense_init, rms_norm
 
 
@@ -128,12 +127,11 @@ def _ssd_chunked(x, dt, a, b, c, d_skip, chunk: int, init_state=None):
     return y, final_state
 
 
-def ssm_train(params, x, cfg, policy: CompressionPolicy, key, *, return_cache=False):
+def ssm_train(params, x, cfg, ctx, key, *, return_cache=False):
     """x: (B, L, d_model) -> (B, L, d_model). Full-sequence training/prefill."""
     din, nh, ng, st, conv_dim, _ = _dims(cfg)
     B, L, _ = x.shape
-    pol = policy if getattr(policy, "name", "none") != "none" else ExactPolicy()
-    zxbcdt = compressed_linear(x, params["in_proj"], None, key, pol)
+    zxbcdt = ctx.apply("ssm.in", x, params["in_proj"], None, key)
     z, xbc, dt = _split_in_proj(cfg, zxbcdt)
     xbc, conv_state = causal_depthwise_conv(xbc, params["conv_w"])
     xbc = jax.nn.silu(xbc)

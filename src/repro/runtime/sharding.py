@@ -188,13 +188,37 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, PS())
 
 
+def current_mesh_axis_names() -> tuple[str, ...] | None:
+    """Axis names of the mesh currently in context, or None.
+
+    Version-portable: newer JAX exposes ``jax.sharding.get_abstract_mesh``;
+    older releases only track the physical mesh set by the ``with mesh:``
+    context manager.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        am = get_abstract()
+        if am is None or am.empty:
+            return None
+        return tuple(am.axis_names)
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if pm is None or pm.empty:
+        return None
+    return tuple(pm.axis_names)
+
+
 def maybe_constrain(x, logical: tuple):
     """with_sharding_constraint using whatever mesh is in context (no-op
     outside a mesh context — keeps model code mesh-agnostic for CPU tests)."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty:
+    names = current_mesh_axis_names()
+    if names is None:
         return x
-    axes = set(am.axis_names)
+    axes = set(names)
     spec = []
     for name in logical:
         rule = DEFAULT_RULES.get(name)

@@ -4,7 +4,15 @@ The returned ``train_step(state, batch, step)`` is a pure function ready for
 ``jax.jit`` with in/out shardings from runtime/sharding.py. PRNG for PAMM's
 per-step generator sampling is ``fold_in(seed_key, step)`` — deterministic,
 checkpoint-free, and identical after an elastic restart (paper App. F notes
-per-step sampling; we reproduce it without host RNG state).
+per-step sampling; we reproduce it without host RNG state). Each compression
+site then folds its canonical ``site_id`` into the per-block key
+(core/linear.py), so every site draws an independent stream.
+
+Compression is configured by the run's CompressionPlan (core/plan.py),
+resolved ONCE here — with the mesh, when given, so shard-local blocking and
+backend choice are derived from the deployment rather than threaded flags.
+Per-site telemetry (stored bytes / kept fraction / beta) lands in the
+returned metrics under ``site/<path>/...``.
 """
 from __future__ import annotations
 
@@ -13,7 +21,9 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import loss_fn, make_run_policy
+from repro.core.plan import resolve_for_run
+from repro.core.stats import site_telemetry_metrics
+from repro.models import loss_fn
 from repro.optim import make_optimizer, warmup_cosine
 from repro.optim.optimizers import clip_by_global_norm
 
@@ -31,8 +41,8 @@ def init_train_state(cfg, rcfg, key, *, n_kv_eff=None):
     return TrainState(params=params, opt=opt_init(params)), specs
 
 
-def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
-    policy = make_run_policy(rcfg)
+def make_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh=None):
+    resolved = resolve_for_run(cfg, rcfg, mesh=mesh)
     _, opt_update = make_optimizer(rcfg.optimizer)
     seed_key = jax.random.key(rcfg.seed)
 
@@ -46,7 +56,7 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
             def micro(b_idx_key):
                 mb, mkey = b_idx_key
                 return jax.value_and_grad(
-                    lambda p: loss_fn(cfg, rcfg, policy, p, mb, mkey), has_aux=True
+                    lambda p: loss_fn(cfg, rcfg, resolved, p, mb, mkey), has_aux=True
                 )(state.params)
 
             micro_batches = jax.tree.map(
@@ -66,7 +76,8 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params
             )
-            zero_m = {"nll": jnp.float32(0), "aux": jnp.float32(0)}
+            zero_m = {"nll": jnp.float32(0), "aux": jnp.float32(0),
+                      "sites": resolved.zero_telemetry()}
             (loss, grads32, metrics), _ = jax.lax.scan(
                 body, (jnp.float32(0), zero_g, zero_m), (micro_batches, mkeys)
             )
@@ -75,7 +86,7 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
             )
         else:
             (loss, metrics), grads = jax.value_and_grad(
-                lambda p: loss_fn(cfg, rcfg, policy, p, batch, key), has_aux=True
+                lambda p: loss_fn(cfg, rcfg, resolved, p, batch, key), has_aux=True
             )(state.params)
         grads, gnorm = clip_by_global_norm(grads, rcfg.grad_clip)
         lr = warmup_cosine(step, total_steps, rcfg.lr, rcfg.warmup_frac)
@@ -89,6 +100,7 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000):
             "grad_norm": gnorm,
             "lr": lr,
         }
+        out_metrics.update(site_telemetry_metrics(metrics.get("sites", {})))
         return TrainState(params=new_params, opt=new_opt), out_metrics
 
     return train_step

@@ -19,7 +19,7 @@ def test_matches_xla_on_loop_free_graph():
         jax.ShapeDtypeStruct((256, 512), jnp.float32),
         jax.ShapeDtypeStruct((512, 1024), jnp.float32),
     )
-    xla = comp.cost_analysis()
+    xla = hlo_cost.xla_cost_analysis(comp)
     mine = hlo_cost.analyze(comp.as_text())
     # dots dominate; elementwise flops are the only divergence
     assert abs(mine["flops"] - xla["flops"]) / xla["flops"] < 0.01

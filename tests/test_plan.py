@@ -1,0 +1,326 @@
+"""CompressionPlan: spec parsing, site resolution precedence, per-site key
+determinism, telemetry, and the legacy-RunConfig shim equivalence."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config
+from repro.core.plan import (
+    CompressionPlan,
+    as_resolved,
+    enumerate_sites,
+    make_run_plan,
+    plan_spec_from_legacy,
+    resolved_from_policy,
+)
+from repro.core.policies import CompActPolicy, ExactPolicy, PammPolicy
+from repro.models import init_model, loss_fn, make_run_policy
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+def test_parse_policy_args():
+    p = CompressionPlan.parse("attn.qkv=pamm(r=1/512,eps=inf,blocks=4,k_max=32)")
+    (rule,) = p.rules
+    assert rule.policy_name == "pamm"
+    args = dict(rule.args)
+    assert args["r"] == pytest.approx(1 / 512)
+    assert args["eps"] == math.inf
+    assert args["blocks"] == 4
+    assert args["k_max"] == 32
+
+
+def test_parse_aliases_and_bare_policies():
+    p = CompressionPlan.parse("ffn.*=exact; ssm.in=crs(r=1/8); lm_head=compact(r=1/4)")
+    assert [r.policy_name for r in p.rules] == ["none", "uniform_crs", "compact"]
+
+
+def test_parse_rejects_unknown_policy_and_args():
+    with pytest.raises(ValueError, match="unknown policy"):
+        CompressionPlan.parse("attn.qkv=svd(r=1/2)")
+    with pytest.raises(ValueError, match="does not accept arg"):
+        CompressionPlan.parse("attn.qkv=compact(eps=1.0)")
+    with pytest.raises(ValueError, match="pattern=policy"):
+        CompressionPlan.parse("attn.qkv")
+
+
+# ---------------------------------------------------------------------------
+# site resolution
+# ---------------------------------------------------------------------------
+def test_site_enumeration_covers_all_kinds():
+    cfg = get_config("recurrentgemma-9b_smoke")  # rec + latt stages
+    paths = [s.path for s in enumerate_sites(cfg)]
+    assert "stage0.rec.rglru.in" in paths
+    assert "stage0.latt.attn.qkv" in paths
+    assert "lm_head" in paths
+    # ids are positions in the canonical enumeration
+    resolved = CompressionPlan.parse("").resolve(cfg)
+    assert [s.site_id for s in resolved.sites] == list(range(len(paths)))
+
+
+def test_resolution_last_match_wins():
+    cfg = get_config("internlm2-1.8b_smoke")
+    r = CompressionPlan.parse(
+        "*=compact(r=1/4);attn.qkv=pamm(r=1/8);stage0.attn.attn.qkv=none"
+    ).resolve(cfg)
+    # the most specific (last) rule overrides the earlier ones
+    assert isinstance(r.site(0, "attn", "attn.qkv").policy, ExactPolicy)
+    assert isinstance(r.site(0, "attn", "ffn.gate").policy, CompActPolicy)
+    # order matters: flipping the rules flips the outcome
+    r2 = CompressionPlan.parse(
+        "stage0.attn.attn.qkv=none;attn.qkv=pamm(r=1/8)"
+    ).resolve(cfg)
+    assert isinstance(r2.site(0, "attn", "attn.qkv").policy, PammPolicy)
+
+
+def test_role_glob_does_not_leak_into_kind_namespace():
+    """'attn.*' is a ROLE glob: it must hit attn.qkv/attn.cross_kv but not
+    the ffn.* roles that live inside attention-kind blocks (kind
+    qualification uses '/': 'attn/ffn.gate')."""
+    cfg = get_config("internlm2-1.8b_smoke")
+    r = CompressionPlan.parse("attn.*=pamm(r=1/8)").resolve(cfg)
+    assert isinstance(r.site(0, "attn", "attn.qkv").policy, PammPolicy)
+    assert isinstance(r.site(0, "attn", "ffn.gate").policy, ExactPolicy)
+    # '/'-qualified kind pattern reaches every role of that kind
+    r2 = CompressionPlan.parse("attn/*=compact(r=1/4)").resolve(cfg)
+    assert isinstance(r2.site(0, "attn", "ffn.gate").policy, CompActPolicy)
+
+
+def test_unmatched_sites_stay_exact_and_typo_warns():
+    import warnings as _warnings
+
+    cfg = get_config("mamba2-370m_smoke")
+    # a valid cross-arch rule missing THIS arch is silent (attn.qkv exists
+    # elsewhere) ...
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        r = CompressionPlan.parse("attn.qkv=pamm(r=1/8)").resolve(cfg)
+    assert isinstance(r.site(0, "ssm", "ssm.in").policy, ExactPolicy)
+    assert r.compressed_sites == ()
+    # ... but a pattern matching no known role at all is a typo -> warn
+    with pytest.warns(UserWarning, match="matches no site"):
+        CompressionPlan.parse("atn.qkv=pamm(r=1/8)").resolve(cfg)
+
+
+def test_mesh_derived_blocking_and_backend():
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    mesh = make_debug_mesh(1, 1)  # data degree 1 on this 1-CPU container
+    r = CompressionPlan.parse("attn.qkv=pamm(blocks=auto,backend=auto)").resolve(
+        cfg, mesh=mesh
+    )
+    pol = r.site(0, "attn", "attn.qkv").policy
+    assert pol.n_blocks == 1
+    assert pol.use_kernel is False  # auto backend is jnp off-TPU
+    # explicit blocks survive resolution untouched
+    r2 = CompressionPlan.parse("attn.qkv=pamm(blocks=8)").resolve(cfg, mesh=mesh)
+    assert r2.site(0, "attn", "attn.qkv").policy.n_blocks == 8
+
+
+# ---------------------------------------------------------------------------
+# per-site key determinism
+# ---------------------------------------------------------------------------
+def test_site_keys_deterministic_and_distinct():
+    cfg = get_config("llama-3.2-vision-11b_smoke")  # has attn.qkv AND cross_kv
+    r = CompressionPlan.parse("attn.*=pamm(r=1/8)").resolve(cfg)
+    sites = {s.path: s for s in r.compressed_sites}
+    qkv = next(s for p, s in sites.items() if p.endswith("attn.qkv"))
+    ckv = next(s for p, s in sites.items() if p.endswith("attn.cross_kv"))
+    key = jax.random.key(7)
+    # deterministic: same (key, site) -> same derived key
+    np.testing.assert_array_equal(
+        jax.random.key_data(qkv.derive_key(key)),
+        jax.random.key_data(qkv.derive_key(key)),
+    )
+    # distinct sites draw distinct streams from the same block key
+    assert not np.array_equal(
+        jax.random.key_data(qkv.derive_key(key)),
+        jax.random.key_data(ckv.derive_key(key)),
+    )
+
+
+def test_site_apply_matches_exact_forward():
+    cfg = get_config("internlm2-1.8b_smoke")
+    r = CompressionPlan.parse("attn.qkv=pamm(r=1/8)").resolve(cfg)
+    site = r.site(0, "attn", "attn.qkv")
+    x = jax.random.normal(jax.random.key(0), (4, 16, cfg.d_model))
+    w = jax.random.normal(jax.random.key(1), (cfg.d_model, 32)) * 0.1
+    z, stats = site.apply(x, w, None, jax.random.key(2))
+    np.testing.assert_allclose(np.asarray(z), np.asarray(x @ w), atol=1e-5)
+    assert stats.shape == (5,)
+    assert float(stats[0]) > 0  # stored bytes
+    assert float(stats[1]) == pytest.approx(float(stats[2]))  # eps=inf keeps all
+
+
+# ---------------------------------------------------------------------------
+# legacy shim equivalence
+# ---------------------------------------------------------------------------
+def _grads(cfg, rcfg, plan, params, batch):
+    (loss, _), g = jax.value_and_grad(
+        lambda p: loss_fn(cfg, rcfg, plan, p, batch, jax.random.key(3)),
+        has_aux=True,
+    )(params)
+    return loss, g
+
+
+@pytest.mark.parametrize("arch,flags", [
+    ("internlm2-1.8b_smoke", {}),
+    ("recurrentgemma-9b_smoke", {"pamm_on_recurrent": True}),
+    ("mamba2-370m_smoke", {"pamm_on_ssm_inproj": True}),
+])
+def test_legacy_flags_match_plan_spec_grads(arch, flags):
+    """make_run_policy(rcfg) (deprecated shim) and the equivalent plan spec
+    resolve to the same sites, the same policies, and the same PRNG streams
+    -> bit-identical losses and gradients."""
+    cfg = get_config(arch)
+    rcfg = RunConfig(policy_name="pamm", pamm_ratio=1 / 8,
+                     compute_dtype="float32", param_dtype="float32", **flags)
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    from tests.test_models_smoke import make_batch
+
+    batch = make_batch(cfg, jax.random.key(1))
+
+    legacy_policy = make_run_policy(rcfg)
+    loss_a, g_a = _grads(cfg, rcfg, legacy_policy, params, batch)
+
+    spec = plan_spec_from_legacy(rcfg)
+    rcfg_plan = dataclasses.replace(rcfg, compression=spec, policy_name="none")
+    loss_b, g_b = _grads(cfg, rcfg_plan, None, params, batch)
+
+    assert float(loss_a) == float(loss_b)
+    for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resolved_from_policy_respects_optin_flags():
+    cfg = get_config("recurrentgemma-9b_smoke")
+    pol = PammPolicy(ratio=1 / 8)
+    rcfg_off = RunConfig(compute_dtype="float32", param_dtype="float32")
+    r_off = resolved_from_policy(pol, cfg, rcfg_off)
+    assert isinstance(r_off.site(0, "rec", "rglru.in").policy, ExactPolicy)
+    rcfg_on = dataclasses.replace(rcfg_off, pamm_on_recurrent=True)
+    r_on = resolved_from_policy(pol, cfg, rcfg_on)
+    assert r_on.site(0, "rec", "rglru.in").policy is pol
+
+
+# ---------------------------------------------------------------------------
+# mixed-plan training + telemetry (the acceptance scenario)
+# ---------------------------------------------------------------------------
+def test_mixed_plan_trains_with_site_telemetry():
+    """PAMM on attn.qkv + CompAct on ffn.* + exact ssm.in in ONE run, with
+    per-site stored-bytes / kept-fraction telemetry in train metrics."""
+    from repro.data import SyntheticStream
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    rcfg = RunConfig(
+        compression=(
+            "attn.qkv=pamm(r=1/8,backend=jnp,blocks=1);"
+            "ffn.*=compact(r=1/4);ssm.in=none;lm_head=pamm(r=1/8,backend=jnp)"
+        ),
+        policy_name="none", compute_dtype="float32", param_dtype="float32",
+    )
+    state, _ = init_train_state(cfg, rcfg, jax.random.key(0))
+    stream = SyntheticStream.for_arch(cfg, 32, 4)
+    step = jax.jit(make_train_step(cfg, rcfg, total_steps=10))
+    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()}
+    state, m = step(state, batch, jnp.int32(0))
+    assert not bool(jnp.isnan(m["loss"]))
+    for path in ("stage0.attn.attn.qkv", "stage0.attn.ffn.gate",
+                 "stage0.attn.ffn.down", "lm_head"):
+        assert f"site/{path}/stored_mb" in m
+        assert float(m[f"site/{path}/stored_mb"]) > 0
+        assert 0.0 < float(m[f"site/{path}/kept_frac"]) <= 1.0
+    assert "site/stage0.attn.ssm.in/stored_mb" not in m  # not a site here
+    # PAMM at eps=inf keeps every row and stores far less than exact
+    d = cfg.d_model
+    tokens = 4 * 32
+    exact_mb = 2 * tokens * d * 4 / 2**20  # 2 layers
+    assert float(m["site/stage0.attn.attn.qkv/stored_mb"]) < exact_mb
+
+
+def test_moe_expert_site_trains():
+    """Whole-network compression reaches MoE expert projections."""
+    from tests.test_models_smoke import make_batch
+
+    cfg = get_config("granite-moe-3b-a800m_smoke")
+    rcfg = RunConfig(compression="moe.expert=pamm(r=1/4,backend=jnp,blocks=1)",
+                     policy_name="none",
+                     compute_dtype="float32", param_dtype="float32")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    resolved = as_resolved(None, cfg, rcfg)
+    assert [s.path for s in resolved.compressed_sites] == [
+        "stage0.moe.moe.expert"
+    ]
+    loss, g = _grads(cfg, rcfg, resolved, params, batch)
+    assert not bool(jnp.isnan(loss))
+    for leaf in jax.tree.leaves(g):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+
+
+def test_pamm_beta_ignores_zero_padding_rows():
+    """Capacity-padded (all-zero) rows, as in MoE expert buffers, must not
+    inflate beta under finite eps: they contribute nothing to X^T dZ."""
+    import numpy as _np
+
+    from repro.core.pamm import pamm_apply, pamm_compress
+
+    x = jax.random.normal(jax.random.key(0), (256, 32))
+    x_pad = jnp.concatenate([x, jnp.zeros((256, 32))])  # 50% padding
+    st_pad = pamm_compress(x_pad, 64, 0.9, jax.random.key(1))
+    kept = int(jnp.sum(st_pad.alpha != 0))
+    # beta = b_eff / n_kept over the 256 NONZERO rows — the unfixed code
+    # used the padded total (512) and doubled every expert weight gradient
+    assert float(st_pad.beta) == pytest.approx(256 / kept, rel=1e-5)
+    # and with the padding-corrected beta, padding half the batch with
+    # zeros leaves the error of the estimate essentially unchanged
+    gz = jax.random.normal(jax.random.key(2), (512, 16))
+    exact = _np.asarray(x.T @ gz[:256])
+
+    def rel(state, g):
+        return _np.linalg.norm(_np.asarray(pamm_apply(state, g)) - exact) \
+            / _np.linalg.norm(exact)
+
+    st = pamm_compress(x, 32, 0.9, jax.random.key(1))
+    r_dense = rel(st, gz[:256])
+    r_padded = rel(st_pad, gz)  # padded rows: gz ignored via alpha=0
+    assert r_padded < 1.5 * r_dense + 0.05, (r_dense, r_padded)
+
+
+def test_plan_activation_report():
+    from repro.core.stats import plan_activation_report
+
+    cfg = get_config("qwen2-72b_smoke")
+    r = make_run_plan(RunConfig(pamm_ratio=1 / 8)).resolve(cfg)
+    reports = plan_activation_report(r, batch=2, seq=32)
+    assert reports and all(rep.compressed_bytes < rep.baseline_bytes
+                           for rep in reports)
+
+
+def test_ffn_gate_up_state_sharing():
+    """Same policy on ffn.gate + ffn.up -> ONE shared state: ffn.up is
+    marked shared_with, has no telemetry entry of its own, and the memory
+    report counts the state once."""
+    from repro.core.stats import plan_activation_report
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    r = CompressionPlan.parse("ffn.*=compact(r=1/4)").resolve(cfg)
+    up = r.site(0, "attn", "ffn.up")
+    assert up.shared_with == "stage0.attn.ffn.gate"
+    tele = r.zero_telemetry()
+    assert "stage0.attn.ffn.gate" in tele and "stage0.attn.ffn.up" not in tele
+    paths = [rep.policy for rep in plan_activation_report(r, batch=2, seq=32)]
+    assert not any("ffn.up" in p for p in paths)
+    # different policies -> no sharing
+    r2 = CompressionPlan.parse(
+        "ffn.gate=compact(r=1/4);ffn.up=compact(r=1/8)"
+    ).resolve(cfg)
+    assert r2.site(0, "attn", "ffn.up").shared_with is None
+    assert "stage0.attn.ffn.up" in r2.zero_telemetry()

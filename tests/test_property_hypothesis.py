@@ -4,6 +4,13 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pinned in pyproject.toml; "
+    "pip install hypothesis to run the property suite)",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pamm import pamm_apply, pamm_compress, pamm_reconstruct
