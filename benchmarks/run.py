@@ -19,6 +19,7 @@ HARNESSES = [
     ("fig4b_epsilon", "benchmarks.bench_epsilon"),
     ("appH_l2_error_coverage", "benchmarks.bench_l2_error"),
     ("appJ_complexity", "benchmarks.bench_complexity"),
+    ("serving_engine", "benchmarks.bench_serving"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]
 

@@ -1,4 +1,5 @@
-"""Batched serving example: prefill a prompt batch, stream greedy tokens.
+"""Continuous-batching serving example: staggered requests, mixed
+greedy/sampled decoding, engine throughput stats.
 
     PYTHONPATH=src python examples/serve_batched.py --arch internlm2-1.8b_smoke
 """
@@ -11,8 +12,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b_smoke")
     args = ap.parse_args()
-    serve_cli.main(["--arch", args.arch, "--batch", "4",
-                    "--prompt-len", "32", "--gen", "16"])
+    serve_cli.main(["--arch", args.arch, "--batch", "4", "--requests", "8",
+                    "--prompt-len", "32", "--gen", "16",
+                    "--temperature", "0.7", "--top-k", "20"])
 
 
 if __name__ == "__main__":

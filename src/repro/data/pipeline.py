@@ -42,7 +42,7 @@ class SyntheticStream:
 
     def __post_init__(self):
         if self.global_batch % self.num_shards:
-            raise ValueError("global_batch must divide num_shards")
+            raise ValueError("num_shards must divide global_batch")
         self.local_batch = self.global_batch // self.num_shards
         self.v_eff = min(self.vocab_size, 4096)
         rng = np.random.default_rng(self.seed)

@@ -80,19 +80,23 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     scale = dh ** -0.5
     bq = min(bq, L)
     bk = min(bk, L)
+    # q and kv lengths pad independently: the query grid tiles by bq, the kv
+    # grid by bk — sharing one pad (the old `pq` for both) mis-sizes nk
+    # whenever bq != bk and silently drops tail keys.
     pq = (-L) % bq
+    pk = (-L) % bk
     pdh = (-dh) % 128
 
     # (B*H, L, dh) layout; kv stays (B*KV, L, dh) and the index map folds GQA
     qr = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, pdh)))
-    kr = jnp.pad(k, ((0, 0), (0, pq), (0, 0), (0, pdh)))
-    vr = jnp.pad(v, ((0, 0), (0, pq), (0, 0), (0, pdh)))
-    Lp, dhp = L + pq, dh + pdh
-    qr = qr.transpose(0, 2, 1, 3).reshape(B * H, Lp, dhp)
-    kr = kr.transpose(0, 2, 1, 3).reshape(B * KV, Lp, dhp)
-    vr = vr.transpose(0, 2, 1, 3).reshape(B * KV, Lp, dhp)
+    kr = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, pdh)))
+    vr = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, pdh)))
+    Lqp, Lkp, dhp = L + pq, L + pk, dh + pdh
+    qr = qr.transpose(0, 2, 1, 3).reshape(B * H, Lqp, dhp)
+    kr = kr.transpose(0, 2, 1, 3).reshape(B * KV, Lkp, dhp)
+    vr = vr.transpose(0, 2, 1, 3).reshape(B * KV, Lkp, dhp)
 
-    nq, nk = Lp // bq, Lp // bk
+    nq, nk = Lqp // bq, Lkp // bk
     grid = (B * H, nq, nk)
 
     def kv_index(bh, iq, jk):
@@ -109,7 +113,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, bk, dhp), kv_index),
         ],
         out_specs=pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Lp, dhp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lqp, dhp), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -117,5 +121,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(qr, kr, vr)
-    out = out.reshape(B, H, Lp, dhp).transpose(0, 2, 1, 3)
+    out = out.reshape(B, H, Lqp, dhp).transpose(0, 2, 1, 3)
     return out[:, :L, :, :dh]

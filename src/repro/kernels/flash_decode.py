@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: single-query (Lq=1) FlashAttention decode.
+
+Decode-time attention reads ONE query row per sequence against the whole
+KV cache. The prefill kernel (flash_attention.py) assumes contiguous
+``arange`` positions; decode caches are slot-addressed — a ring buffer for
+sliding-window layers stores absolute positions per slot (``slot_pos``,
+-1 = empty) — so masking must come from the cache metadata, not iota.
+
+Layout: queries fold to (B*KV, G, dh) — the G grouped query heads that
+share one kv head become the sublane dim, so GQA needs no K/V replication
+in HBM. Grid = (B*KV, S/bk); online softmax (running max / denom / acc in
+VMEM scratch) walks the kv tiles, exactly like the prefill kernel, but the
+whole (S,) score row is never materialized — the jnp decode path in
+models/attention.py previously built (B, KV, G, 1, S) scores per step.
+
+Oracle: :func:`flash_decode_ref` (also the CPU serving path — interpret
+mode is far too slow per decode step for a per-token inner loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, spos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, nk: int, causal: bool,
+                   window: int, scale: float):
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, dhp)
+    k = k_ref[0].astype(jnp.float32)          # (bk, dhp)
+    v = v_ref[0].astype(jnp.float32)          # (bk, dhp)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (G, bk)
+
+    qpos = qpos_ref[0, 0]                      # scalar absolute query position
+    spos = spos_ref[...]                       # (1, bk) absolute slot positions
+    mask = spos >= 0                           # empty / padded slots
+    if causal:
+        mask = mask & (spos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - spos < window)
+    s = jnp.where(mask, s, NEG_INF)            # (1,bk) broadcasts over G
+
+    m_prev = m_ref[...]                        # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bk", "interpret")
+)
+def flash_decode_kernel(q, k, v, q_pos, slot_pos, *, causal: bool = True,
+                        window: int = 0, bk: int = DEFAULT_BK,
+                        interpret: bool = True):
+    """q: (B, 1, H, dh); k, v: (B, S, KV, dh); q_pos: (B,) int32 absolute;
+    slot_pos: (B, S) int32 absolute-position-per-slot (-1 = empty).
+    Returns (B, 1, H, dh)."""
+    B, Lq, H, dh = q.shape
+    assert Lq == 1, "flash_decode is the single-query path"
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    bk = min(bk, S)
+    pk = (-S) % bk
+    pdh = (-dh) % 128
+    Sp, dhp = S + pk, dh + pdh
+
+    qr = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pdh)))
+    qr = qr.reshape(B, KV, G, dhp).reshape(B * KV, G, dhp)
+    kr = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, pdh)))
+    vr = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, pdh)))
+    kr = kr.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dhp)
+    vr = vr.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dhp)
+    sposr = jnp.pad(slot_pos, ((0, 0), (0, pk)), constant_values=-1)
+    qposr = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    nk = Sp // bk
+    grid = (B * KV, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, jk: (bh // KV, 0)),
+            pl.BlockSpec((1, G, dhp), lambda bh, jk: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, dhp), lambda bh, jk: (bh, jk, 0)),
+            pl.BlockSpec((1, bk, dhp), lambda bh, jk: (bh, jk, 0)),
+            pl.BlockSpec((1, bk), lambda bh, jk: (bh // KV, jk)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dhp), lambda bh, jk: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, dhp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dhp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qposr, qr, kr, vr, sposr)
+    return out.reshape(B, KV, G, dhp)[..., :dh].reshape(B, 1, H, dh)
+
+
+def flash_decode_ref(q, k, v, q_pos, slot_pos, *, causal: bool = True,
+                     window: int = 0):
+    """Pure-jnp oracle / CPU serving path (same signature, same math).
+
+    Materializes (B, KV, G, S) scores — one query row per kv head — not the
+    (B, KV, G, 1, S) tensor the old chunk=1 sdpa path built.
+    """
+    B, Lq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, KV, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    qp = q_pos.reshape(B)[:, None, None, None]
+    sp = slot_pos[:, None, None, :]
+    mask = sp >= 0
+    if causal:
+        mask = mask & (sp <= qp)
+    if window > 0:
+        mask = mask & (qp - sp < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def flash_decode(q, k, v, q_pos, slot_pos, *, causal: bool = True,
+                 window: int = 0, use_pallas: bool | None = None):
+    """Dispatch: Pallas kernel on TPU, jnp reference math elsewhere.
+
+    Both paths are row-independent over the batch dim, so batched decode is
+    bit-identical per sequence to a batch-of-1 run (the continuous-batching
+    invariant the serving tests pin down).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_decode_kernel(q, k, v, q_pos, slot_pos, causal=causal,
+                                   window=window,
+                                   interpret=jax.default_backend() != "tpu")
+    return flash_decode_ref(q, k, v, q_pos, slot_pos, causal=causal,
+                            window=window)

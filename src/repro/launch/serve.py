@@ -1,44 +1,106 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Continuous-batching serving driver.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama-60m --batch 4 \
-      --prompt-len 64 --gen 32
+      --requests 8 --prompt-len 64 --gen 32 --temperature 0.8 --top-k 40
+
+Requests get staggered prompt lengths so admissions and evictions overlap
+mid-stream (the continuous-batching path, not one static batch). ``--smoke``
+runs the workload twice and asserts identical outputs and tok/s > 0 — the
+CI serving smoke job.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import RunConfig, get_config
 from repro.data import SyntheticStream
 from repro.models import init_model
-from repro.train.serve_step import greedy_decode
+from repro.serve import Request, SamplingParams, ServeEngine
+
+
+def _build_requests(cfg, args) -> list[Request]:
+    stream = SyntheticStream.for_arch(cfg, args.prompt_len, args.requests)
+    batch = stream.get_batch(0)
+    requests = []
+    for i in range(args.requests):
+        # stagger prompt lengths so requests join/leave mid-stream
+        lp = max(4, args.prompt_len - 3 * (i % 4))
+        img = batch["image_embeds"][i] if cfg.vision_tokens else None
+        requests.append(Request(
+            uid=i,
+            tokens=np.asarray(batch["tokens"][i][:lp]).tolist(),
+            max_new_tokens=args.gen,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, seed=args.seed + i),
+            image_embeds=img,
+        ))
+    return requests
+
+
+def _serve_once(cfg, rcfg, params, args):
+    engine = ServeEngine(cfg, rcfg, params, max_slots=args.batch,
+                         max_len=args.prompt_len + args.gen + 1,
+                         decode_block=args.decode_block)
+    results = engine.run(_build_requests(cfg, args))
+    return results, engine.stats()
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="engine slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: 2x batch)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode tokens per fused lax.scan call")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--compression", default="",
+                    help="CompressionPlan spec exercised during prefill, "
+                         "e.g. 'attn.qkv=pamm(r=1/512)' (DESIGN.md §2)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run twice, assert determinism and tok/s > 0")
     args = ap.parse_args(argv)
+    if not args.requests:
+        args.requests = 2 * args.batch
 
     cfg = get_config(args.arch)
-    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32", policy_name="none")
+    rcfg = RunConfig(compute_dtype=args.dtype, param_dtype=args.dtype,
+                     policy_name="none", compression=args.compression)
     params, _ = init_model(cfg, rcfg, jax.random.key(0))
-    stream = SyntheticStream.for_arch(cfg, args.prompt_len, args.batch)
-    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()
-             if k in ("tokens", "embeds", "image_embeds")}
 
-    t0 = time.monotonic()
-    out = greedy_decode(cfg, rcfg, params, batch,
-                        steps=args.gen, max_len=args.prompt_len + args.gen + 1)
-    dt = time.monotonic() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", out[0, :16].tolist())
+    results, stats = _serve_once(cfg, rcfg, params, args)
+    for uid in sorted(results):
+        r = results[uid]
+        print(f"req {uid}: prompt={r.prompt_len} new={len(r.tokens)} "
+              f"finish={r.finish_reason} {r.decode_tok_s:.1f} tok/s "
+              f"sample={r.tokens[:8]}")
+    print(f"prefill {stats['prefill_tok_s']:.1f} tok/s | "
+          f"decode {stats['decode_tok_s']:.1f} tok/s | "
+          f"p50 {stats['p50_token_latency_ms']:.2f} ms | "
+          f"p95 {stats['p95_token_latency_ms']:.2f} ms | "
+          f"cache {stats['cache_slot_bytes'] / 1e6:.2f} MB/slot")
+
+    if args.smoke:
+        again, stats2 = _serve_once(cfg, rcfg, params, args)
+        same = all(again[u].tokens == results[u].tokens for u in results)
+        if not same:
+            print("SMOKE FAIL: outputs not deterministic", file=sys.stderr)
+            sys.exit(1)
+        if not (stats["decode_tok_s"] > 0 and stats["prefill_tok_s"] > 0):
+            print("SMOKE FAIL: zero throughput", file=sys.stderr)
+            sys.exit(1)
+        print("SMOKE OK")
 
 
 if __name__ == "__main__":

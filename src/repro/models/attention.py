@@ -28,9 +28,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import SiteCtx, exact_ctx
+from repro.kernels.flash_decode import flash_decode
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
 
 NEG_INF = -1e30
+
+
+def use_attn_kernel(rcfg) -> bool:
+    """Resolve RunConfig.attn_kernel: pallas | jnp | auto (= pallas on TPU).
+
+    The single policy point for serving attention backends — every Pallas/
+    jnp fork (prefill flash_attention, decode flash_decode) takes its
+    decision from here, with ``pallas`` off-TPU meaning interpret mode
+    (tests only; far too slow to serve with).
+    """
+    mode = getattr(rcfg, "attn_kernel", "auto")
+    if mode == "pallas":
+        return True
+    if mode == "jnp":
+        return False
+    from repro.kernels.ops import on_tpu
+
+    return on_tpu()
 
 
 # ---------------------------------------------------------------------------
@@ -181,32 +200,50 @@ def cache_insert(cache: KVCache, k_new, v_new, positions) -> KVCache:
 # block-level entry points
 # ---------------------------------------------------------------------------
 def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
-               flash_sdp: bool = True):
-    """Self-attention over a full sequence (training / prefill math)."""
+               flash_sdp: bool = True, kernel: bool = False):
+    """Self-attention over a full sequence (training / prefill math).
+
+    ``kernel=True`` runs the Pallas FlashAttention-2 kernel instead of the
+    chunked jnp sdpa. The kernel is forward-only (no custom VJP), so callers
+    enable it only on non-differentiated paths — serving prefill.
+    """
     q, k, v = _project_qkv(params, x, x, ctx, key, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    sdp = lambda q_, k_, v_: sdpa(
-        q_, k_, v_, positions, positions, causal=True, window=window, chunk=chunk
-    )
-    if flash_sdp:
-        # FlashAttention memory semantics: save only q/k/v, recompute the
-        # (chunk x L) scores and probabilities during backward.
-        sdp = jax.checkpoint(sdp, prevent_cse=False)
-    out = sdp(q, k, v)
+    if kernel:
+        from repro.kernels.ops import flash_attention, on_tpu
+
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=not on_tpu())
+    else:
+        sdp = lambda q_, k_, v_: sdpa(
+            q_, k_, v_, positions, positions, causal=True, window=window, chunk=chunk
+        )
+        if flash_sdp:
+            # FlashAttention memory semantics: save only q/k/v, recompute the
+            # (chunk x L) scores and probabilities during backward.
+            sdp = jax.checkpoint(sdp, prevent_cse=False)
+        out = sdp(q, k, v)
     out = out.reshape(*x.shape[:-1], -1)
     return out @ params["wo"].astype(x.dtype), (k, v)
 
 
-def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int):
-    """One-step decode: x (B, 1, d), positions (B, 1) absolute."""
+def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int,
+                kernel: bool = False):
+    """One-step decode: x (B, 1, d), positions (B, 1) absolute.
+
+    Attention runs through the single-query flash path (kernels/
+    flash_decode.py): Pallas online-softmax over kv tiles when ``kernel``,
+    else its jnp oracle — either way without the (B, KV, G, 1, S) score
+    tensor the chunk=1 sdpa used to materialize.
+    """
     q, k, v = _project_qkv(params, x, x, exact_ctx(), None, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     cache = cache_insert(cache, k, v, positions)
-    out = sdpa(
-        q, cache.k, cache.v, positions, cache.slot_pos,
-        causal=True, window=window, chunk=1,
+    out = flash_decode(
+        q, cache.k, cache.v, positions[:, 0], cache.slot_pos,
+        causal=True, window=window, use_pallas=kernel,
     )
     out = out.reshape(*x.shape[:-1], -1)
     return out @ params["wo"].astype(x.dtype), cache
@@ -228,7 +265,7 @@ def cross_attn(params, x, image_embeds, cfg, ctx, key, *, chunk: int,
     return jnp.tanh(params["gate_attn"].astype(x.dtype)) * out, (k, v)
 
 
-def cross_attn_decode(params, x, kv_cached, cfg):
+def cross_attn_decode(params, x, kv_cached, cfg, *, kernel: bool = False):
     """Decode-time cross-attention against cached image K/V."""
     k, v = kv_cached
     dh = cfg.head_dim
@@ -239,10 +276,11 @@ def cross_attn_decode(params, x, kv_cached, cfg):
     q = q.reshape(*x.shape[:-1], h, dh)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
-    B, Lq = x.shape[0], x.shape[1]
+    B = x.shape[0]
     Lk = k.shape[1]
-    qpos = jnp.zeros((B, Lq), jnp.int32)
+    qpos = jnp.zeros((B,), jnp.int32)
     kpos = jnp.broadcast_to(jnp.arange(Lk, dtype=jnp.int32), (B, Lk))
-    out = sdpa(q, k, v, qpos, kpos, causal=False, window=0, chunk=1)
+    out = flash_decode(q, k, v, qpos, kpos, causal=False, window=0,
+                       use_pallas=kernel)
     out = out.reshape(*x.shape[:-1], -1) @ params["wo"].astype(x.dtype)
     return jnp.tanh(params["gate_attn"].astype(x.dtype)) * out

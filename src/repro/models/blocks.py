@@ -85,6 +85,9 @@ def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
             params["attn"], h, positions, cfg, ctx, key,
             window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
             flash_sdp=rcfg.flash_sdp,
+            # Pallas prefill: the kernel is forward-only, so only the
+            # non-differentiated cache-building path may take it.
+            kernel=want_cache and attn_lib.use_attn_kernel(rcfg),
         )
         x = x + out
         if want_cache:
@@ -140,7 +143,8 @@ def block_decode(kind, cfg, rcfg, params, x, positions, cache, extras):
 
     if kind in ("attn", "swa", "latt", "moe"):
         out, cache = attn_lib.attn_decode(
-            params["attn"], h, positions, cache, cfg, window=_window_for(kind, cfg)
+            params["attn"], h, positions, cache, cfg,
+            window=_window_for(kind, cfg), kernel=attn_lib.use_attn_kernel(rcfg),
         )
         x = x + out
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
@@ -153,7 +157,8 @@ def block_decode(kind, cfg, rcfg, params, x, positions, cache, extras):
         x = x + out2
 
     elif kind == "xattn":
-        out = attn_lib.cross_attn_decode(params["attn"], h, cache, cfg)
+        out = attn_lib.cross_attn_decode(params["attn"], h, cache, cfg,
+                                         kernel=attn_lib.use_attn_kernel(rcfg))
         x = x + out
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn(params["ffn"], h2)

@@ -5,7 +5,7 @@ Public API (all pure functions over plain pytrees):
   init_model(cfg, rcfg, key, n_kv_eff=None)       -> (params, specs)
   loss_fn(cfg, rcfg, plan, params, batch, key)    -> (loss, metrics)
   forward(cfg, rcfg, plan, params, batch, key)    -> (hidden, aux)
-  prefill(cfg, rcfg, params, batch, max_len)      -> (logits_last, caches)
+  prefill(cfg, rcfg, params, batch, max_len, plan=None) -> (logits_last, caches)
   decode_step(cfg, rcfg, params, tokens, pos, caches, extras) -> (logits, caches)
 
 ``plan`` is anything ``core.plan.as_resolved`` accepts: a spec string, a
@@ -292,10 +292,18 @@ def cache_logical_specs(cfg, *, shard_cache_seq: bool = False):
     return specs
 
 
-def prefill(cfg, rcfg, params, batch, max_len: int):
-    """Run the prompt, build caches sized ``max_len``. Returns (logits, caches)."""
+def prefill(cfg, rcfg, params, batch, max_len: int, plan=None):
+    """Run the prompt, build caches sized ``max_len``. Returns (logits, caches).
+
+    ``plan``: optional CompressionPlan spec/object routed through the same
+    per-site resolution as training (``as_resolved``). Forward outputs are
+    exact for every policy (compression only approximates grad_W), so a
+    serving plan changes no logits — but it exercises plan resolution and
+    site dispatch instead of silently bypassing them, and ``None`` keeps
+    the zero-overhead exact path.
+    """
     cdt, _ = _dtype(rcfg)
-    ctx = plan_lib.exact_ctx()
+    resolved = None if plan is None else plan_lib.as_resolved(plan, cfg, rcfg)
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
@@ -307,10 +315,12 @@ def prefill(cfg, rcfg, params, batch, max_len: int):
     for si, (unit, rep) in enumerate(cfg.stages):
         unit_params = params["stages"][si]
 
-        def body2(x_c, bparams):
+        def body2(x_c, bparams, si=si):
             outs = []
             a = jnp.float32(0)
             for bi, kind in enumerate(unit):
+                ctx = plan_lib.exact_ctx() if resolved is None else \
+                    resolved.ctx(si, kind, None)
                 x_c, a, cache = blk.block_train(
                     kind, cfg, rcfg, ctx, bparams[bi], x_c, positions, extras,
                     key, a, want_cache=True, max_len=max_len,

@@ -1,0 +1,18 @@
+"""Serving subsystem: continuous-batching engine over the Pallas
+attention path (DESIGN.md §9)."""
+from repro.serve.cache import cache_bytes, read_slot, slot_bytes, write_slot
+from repro.serve.engine import Request, RequestOutput, ServeEngine
+from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
+
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "RequestOutput",
+    "SamplingParams",
+    "sample_tokens",
+    "request_keys",
+    "write_slot",
+    "read_slot",
+    "cache_bytes",
+    "slot_bytes",
+]

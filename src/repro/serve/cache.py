@@ -1,0 +1,73 @@
+"""Slot-addressed decode-cache helpers for the serving engine.
+
+The engine owns ONE batched cache pytree (built by ``models.init_caches``
+with B = max_slots): every leaf that is per-sequence has the batch slot at
+axis 1 — axis 0 is the layer-stack (scan) dim. Examples:
+
+  KVCache.k        (layers, B, S, KV, dh)
+  KVCache.slot_pos (layers, B, S)
+  RGLRUCache.h     (layers, B, width)
+  xattn (k, v)     (layers, B, vision_tokens, KV, dh)
+
+Per-layer scalars — the ring flags, shape (layers,) — carry no batch dim;
+they are identical between the engine cache and any single-request cache,
+so slot writes pass them through untouched (recognized by equal shapes).
+
+Admission = prefill the request alone (batch 1), then splice its cache
+into the slot. Eviction needs no reset: a freed slot's stale K/V rows are
+unreachable (its decode position is parked at -1, which masks every slot
+in flash_decode and makes cache_insert drop the write), and the next
+admission overwrites the whole slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def write_slot(full, one, slot):
+    """Splice a batch-1 cache pytree into batch slot ``slot`` of ``full``.
+
+    ``slot`` may be a tracer (the engine jits this). Per-layer scalar
+    leaves — rank <= 1, i.e. (layers,) ring flags — have no batch axis and
+    pass through; shape equality would misfire when max_slots == 1.
+    """
+    def f(a, b):
+        if a.ndim <= 1:
+            return a
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, b.astype(a.dtype), slot, axis=1
+        )
+
+    return jax.tree.map(f, full, one)
+
+
+def read_slot(full, slot):
+    """Extract batch slot ``slot`` as a batch-1 cache pytree (debug/tests)."""
+    def f(a):
+        if a.ndim <= 1:
+            return a
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+
+    return jax.tree.map(f, full)
+
+
+def cache_bytes(caches) -> int:
+    """Total decode-cache footprint in bytes (engine stats)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(caches)
+    )
+
+
+def slot_bytes(caches, max_slots: int) -> int:
+    """Per-slot share of the cache footprint (layer scalars amortized)."""
+    return cache_bytes(caches) // max(1, max_slots)
+
+
+def park_positions(pos, active):
+    """Decode positions with inactive slots parked at -1.
+
+    -1 makes ``attention.cache_insert`` drop the write (mode="drop") and
+    masks every key in flash_decode, so a free slot's step is inert.
+    """
+    return jnp.where(active, pos, -1)

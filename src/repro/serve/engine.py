@@ -1,0 +1,392 @@
+"""Continuous-batching serving engine over the Pallas attention path.
+
+The engine owns ``max_slots`` fixed batch slots. A request's lifecycle:
+
+  QUEUED   -> in the FIFO admission queue
+  PREFILL  -> admitted to a free slot: the prompt runs alone (batch 1)
+              through ``models.prefill`` — attention via the Pallas
+              FlashAttention kernel on TPU (``RunConfig.attn_kernel``) —
+              and the resulting caches are spliced into the slot
+              (serve/cache.py). The first token is sampled from the
+              prefill logits.
+  DECODE   -> the slot joins the fused decode loop: ``decode_block``
+              tokens per jitted ``lax.scan`` call over the whole batch,
+              single-query flash attention against the slot caches
+              (kernels/flash_decode.py), per-slot sampling and stop
+              conditions evaluated inside the scan.
+  FINISHED -> eos / max_new_tokens / max_len reached; the slot frees with
+              no cache reset — a parked position (-1) makes the slot's
+              decode step inert, and the next admission overwrites it.
+
+Per-sequence math is row-independent end to end, so a request's tokens
+are identical whether it runs alone or continuously batched (pinned by
+tests/test_serving.py). Known exception: MoE token-dropping couples rows
+through expert capacity, so batch composition can perturb MoE outputs —
+serve MoE archs with ``capacity_factor`` high enough to avoid drops if
+exact parity matters.
+
+The scheduler deliberately keeps admission OUT of the fused loop: a scan
+over decode steps never re-enters Python, and the engine only pays the
+(batch-1) prefill + slot-splice when the queue is non-empty.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches, prefill
+from repro.serve import cache as cache_lib
+from repro.serve.sampling import SamplingParams, sample_tokens
+
+PAD_TOKEN = -1
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``eos_id`` < 0 disables the eos stop."""
+
+    uid: int
+    tokens: Sequence[int]
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    eos_id: int = -1
+    image_embeds: Optional[np.ndarray] = None  # (vision_tokens, d) for vlm
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    uid: int
+    prompt_len: int
+    tokens: list[int]
+    finish_reason: str          # "eos" | "length"
+    prefill_s: float
+    decode_s: float             # wall time of the fused decode blocks this
+                                # request was active in (other requests'
+                                # admission prefills are excluded)
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Decode-loop rate: the first token is sampled during prefill and
+        excluded from decode_s, so it is excluded from the count too."""
+        n = len(self.tokens) - 1
+        return n / self.decode_s if self.decode_s > 0 and n > 0 else 0.0
+
+
+class ServeEngine:
+    """Continuous-batching engine. See module docstring for the design."""
+
+    def __init__(self, cfg, rcfg, params, *, max_slots: int, max_len: int,
+                 decode_block: int = 8, plan=None, n_kv_eff: int | None = None):
+        if cfg.embed_inputs:
+            raise NotImplementedError(
+                "serving needs a token frontend; embed-input archs "
+                "(musicgen) are train/score only")
+        if cfg.n_codebooks:
+            raise NotImplementedError("multi-codebook decode is not served")
+        self.cfg, self.rcfg, self.params = cfg, rcfg, params
+        self.max_slots, self.max_len = max_slots, max_len
+        self.decode_block = decode_block
+        self.plan = plan if plan is not None else (rcfg.compression or None)
+
+        # n_kv_eff: KV heads replicated for TP divisibility — the slot
+        # caches must match the params' KV dim or write_slot's splice fails
+        self.caches = init_caches(cfg, rcfg, max_slots, max_len,
+                                  n_kv_eff=n_kv_eff)
+        B = max_slots
+        self.slot_uid = np.full((B,), -1, np.int64)
+        self.tok = np.zeros((B,), np.int32)
+        self.pos = np.full((B,), -1, np.int32)
+        self.remaining = np.zeros((B,), np.int32)
+        self.gen_idx = np.zeros((B,), np.int32)
+        self.active = np.zeros((B,), bool)
+        self.seeds = np.zeros((B,), np.int32)
+        self.temps = np.zeros((B,), np.float32)
+        self.topks = np.zeros((B,), np.int32)
+        self.eos_ids = np.full((B,), -1, np.int32)
+
+        self.queue: collections.deque[Request] = collections.deque()
+        self._outputs: dict[int, list[int]] = {}
+        self._decode_acc: dict[int, float] = {}
+        self._prefill_s: dict[int, float] = {}
+        self._requests: dict[int, Request] = {}
+
+        # aggregate stats
+        self.prefill_tokens = 0
+        self.prefill_time = 0.0
+        self.decode_tokens = 0
+        self.decode_time = 0.0
+        # seconds per decode step; bounded ring so a long-lived engine
+        # doesn't grow host memory one float per generated token
+        self.latency_samples: collections.deque[float] = collections.deque(
+            maxlen=65536)
+
+        cfg_, rcfg_, max_len_, plan_ = cfg, rcfg, max_len, self.plan
+        self._prefill_fn = jax.jit(
+            lambda params, batch: prefill(cfg_, rcfg_, params, batch,
+                                          max_len_, plan_))
+        self._decode_fns: dict[int, callable] = {}
+        # the engine never reuses the pre-call cache value, so on TPU the
+        # cache buffers are donated — in-place slot splices and decode
+        # blocks instead of a full-cache copy (and 2x peak cache memory)
+        # per call. CPU donation is a measured pessimization; skip it.
+        from repro.kernels.ops import on_tpu
+
+        self._donate = (1,) if on_tpu() else ()
+        self._write_slot = jax.jit(cache_lib.write_slot,
+                                   donate_argnums=(0,) if on_tpu() else ())
+        self._sample_first = jax.jit(self._sample_first_impl)
+
+    # ------------------------------------------------------------------
+    # compiled pieces
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _sample_first_impl(logits1, seed, temp, topk):
+        return sample_tokens(logits1[None].astype(jnp.float32), seed[None],
+                             jnp.zeros((1,), jnp.int32), temp[None],
+                             topk[None])[0]
+
+    def _get_decode(self, steps: int):
+        """Jitted fused decode loop: ``steps`` tokens in one lax.scan.
+        (jax.jit itself caches per prompt length on the prefill side; the
+        scan length is a Python constant, hence the explicit dict here.)"""
+        fn = self._decode_fns.get(steps)
+        if fn is None:
+            cfg, rcfg = self.cfg, self.rcfg
+            vocab, max_len = cfg.vocab_size, self.max_len
+
+            def loop(params, caches, tok, pos, active, remaining, gen_idx,
+                     seeds, temps, topks, eos_ids):
+                def body(carry, _):
+                    caches, tok, pos, active, remaining, gen_idx = carry
+                    safe_pos = cache_lib.park_positions(pos, active)[:, None]
+                    logits, caches = decode_step(
+                        cfg, rcfg, params, tok[:, None], safe_pos, caches)
+                    logits1 = logits[:, 0, :vocab].astype(jnp.float32)
+                    nxt = sample_tokens(logits1, seeds, gen_idx, temps, topks)
+                    emitted = jnp.where(active, nxt, PAD_TOKEN)
+                    was_active = active
+                    stepped = active.astype(jnp.int32)
+                    tok = jnp.where(active, nxt, tok)
+                    pos = pos + stepped
+                    remaining = remaining - stepped
+                    gen_idx = gen_idx + stepped
+                    active = (active & (remaining > 0) & (nxt != eos_ids)
+                              & (pos < max_len - 1))
+                    ys = (emitted, was_active)
+                    return (caches, tok, pos, active, remaining, gen_idx), ys
+
+                carry = (caches, tok, pos, active, remaining, gen_idx)
+                carry, ys = jax.lax.scan(body, carry, None, length=steps)
+                return carry, ys
+
+            fn = jax.jit(loop, donate_argnums=self._donate)
+            self._decode_fns[steps] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        lp = len(req.tokens)
+        if lp < 1 or req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: empty prompt or generation")
+        if lp + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt_len={lp} + max_new_tokens="
+                f"{req.max_new_tokens} exceeds max_len={self.max_len}")
+        if self.cfg.vision_tokens and req.image_embeds is None:
+            raise ValueError(f"request {req.uid}: arch needs image_embeds")
+        self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active.any())
+
+    def _free_slots(self) -> list[int]:
+        return [int(i) for i in np.nonzero(~self.active)[0]]
+
+    def _admit(self, req: Request, slot: int) -> Optional[RequestOutput]:
+        lp = len(req.tokens)
+        batch = {"tokens": jnp.asarray(np.asarray(req.tokens, np.int32))[None]}
+        if self.cfg.vision_tokens:
+            batch["image_embeds"] = jnp.asarray(
+                req.image_embeds, jnp.float32)[None]
+        t0 = time.perf_counter()
+        logits, pcaches = self._prefill_fn(self.params, batch)
+        tok0 = self._sample_first(
+            logits[0, -1, : self.cfg.vocab_size],
+            jnp.int32(req.sampling.seed),
+            jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k),
+        )
+        self.caches = self._write_slot(self.caches, pcaches, jnp.int32(slot))
+        tok0 = int(tok0)
+        jax.block_until_ready(self.caches)
+        dt = time.perf_counter() - t0
+        self.prefill_tokens += lp
+        self.prefill_time += dt
+
+        self._requests[req.uid] = req
+        self._outputs[req.uid] = [tok0]
+        self._prefill_s[req.uid] = dt
+        self._decode_acc[req.uid] = 0.0
+
+        self.slot_uid[slot] = req.uid
+        self.tok[slot] = tok0
+        self.pos[slot] = lp
+        self.remaining[slot] = req.max_new_tokens - 1
+        self.gen_idx[slot] = 1
+        self.seeds[slot] = req.sampling.seed
+        self.temps[slot] = req.sampling.temperature
+        self.topks[slot] = req.sampling.top_k
+        self.eos_ids[slot] = req.eos_id
+        eos_hit = req.eos_id >= 0 and tok0 == req.eos_id
+        self.active[slot] = (self.remaining[slot] > 0 and not eos_hit
+                             and self.pos[slot] < self.max_len - 1)
+        if not self.active[slot]:
+            return self._finish(slot)
+        return None
+
+    def _finish(self, slot: int) -> RequestOutput:
+        uid = int(self.slot_uid[slot])
+        req = self._requests.pop(uid)
+        toks = self._outputs.pop(uid)
+        reason = ("eos" if req.eos_id >= 0 and toks and toks[-1] == req.eos_id
+                  else "length")
+        out = RequestOutput(
+            uid=uid,
+            prompt_len=len(req.tokens),
+            tokens=toks,
+            finish_reason=reason,
+            prefill_s=self._prefill_s.pop(uid),
+            decode_s=self._decode_acc.pop(uid),
+        )
+        self.slot_uid[slot] = -1
+        self.active[slot] = False
+        self.pos[slot] = -1
+        # reset sampling state: a stale temperature > 0 on a free slot
+        # would keep defeating sample_tokens' all-greedy lax.cond fast path
+        self.temps[slot] = 0.0
+        self.topks[slot] = 0
+        self.seeds[slot] = 0
+        self.eos_ids[slot] = -1
+        return out
+
+    # ------------------------------------------------------------------
+    # engine loop
+    # ------------------------------------------------------------------
+    def step(self, *, decode_steps: int | None = None) -> list[RequestOutput]:
+        """Admit what fits, then run one fused decode block. Returns the
+        requests that finished during this step."""
+        finished: list[RequestOutput] = []
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            done = self._admit(self.queue.popleft(), slot)
+            if done is not None:
+                finished.append(done)
+
+        if not self.active.any():
+            return finished
+
+        steps = decode_steps or self.decode_block
+        # Don't scan far past the longest remaining generation (inert
+        # trailing iterations still run full decode steps over the batch),
+        # but round tails up to a power of two: each distinct scan length
+        # is a separate full-model compile, so an exact cap would pay
+        # seconds of compilation to save milliseconds of masked steps.
+        cap = max(1, int(self.remaining[self.active].max()))
+        if cap < steps:
+            steps = min(steps, 1 << (cap - 1).bit_length() if cap > 1 else 1)
+        fn = self._get_decode(steps)
+        t0 = time.perf_counter()
+        carry, (emitted, was_active) = fn(
+            self.params, self.caches,
+            jnp.asarray(self.tok), jnp.asarray(self.pos),
+            jnp.asarray(self.active), jnp.asarray(self.remaining),
+            jnp.asarray(self.gen_idx), jnp.asarray(self.seeds),
+            jnp.asarray(self.temps), jnp.asarray(self.topks),
+            jnp.asarray(self.eos_ids),
+        )
+        (self.caches, tok, pos, active, remaining, gen_idx) = carry
+        emitted = np.asarray(emitted)          # (steps, B)
+        was_active = np.asarray(was_active)    # (steps, B)
+        dt = time.perf_counter() - t0
+
+        n_emitted = int(was_active.sum())
+        n_steps_run = int(was_active.any(axis=1).sum())
+        self.decode_tokens += n_emitted
+        self.decode_time += dt
+        if n_steps_run:
+            self.latency_samples.extend([dt / n_steps_run] * n_steps_run)
+
+        # np.array (not asarray): device arrays view as read-only buffers
+        self.tok = np.array(tok)
+        self.pos = np.array(pos)
+        self.remaining = np.array(remaining)
+        self.gen_idx = np.array(gen_idx)
+        prev_active = self.active
+        self.active = np.array(active)
+
+        for b in range(self.max_slots):
+            uid = int(self.slot_uid[b])
+            if uid < 0:
+                continue
+            if was_active[:, b].any():
+                self._decode_acc[uid] += dt
+            for t in range(steps):
+                if was_active[t, b]:
+                    self._outputs[uid].append(int(emitted[t, b]))
+            if prev_active[b] and not self.active[b]:
+                finished.append(self._finish(b))
+        return finished
+
+    def run(self, requests: Sequence[Request]) -> dict[int, RequestOutput]:
+        """Submit everything, drive steps until drained."""
+        for r in requests:
+            self.submit(r)
+        done: dict[int, RequestOutput] = {}
+        while self.has_work:
+            for out in self.step():
+                done[out.uid] = out
+        return done
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the aggregate counters (e.g. after a compile warmup pass);
+        compiled functions and slot state are kept."""
+        self.prefill_tokens = 0
+        self.prefill_time = 0.0
+        self.decode_tokens = 0
+        self.decode_time = 0.0
+        self.latency_samples.clear()
+
+    def stats(self) -> dict:
+        lat = sorted(self.latency_samples)
+
+        def pct(p):
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        return {
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_s": self.prefill_time,
+            "prefill_tok_s": (self.prefill_tokens / self.prefill_time
+                              if self.prefill_time else 0.0),
+            "decode_tokens": self.decode_tokens,
+            "decode_s": self.decode_time,
+            "decode_tok_s": (self.decode_tokens / self.decode_time
+                             if self.decode_time else 0.0),
+            "p50_token_latency_ms": pct(0.50) * 1e3,
+            "p95_token_latency_ms": pct(0.95) * 1e3,
+            "cache_slot_bytes": cache_lib.slot_bytes(self.caches, self.max_slots),
+        }

@@ -2,11 +2,18 @@
 
 ``decode_32k`` / ``long_500k`` dry-run cells lower ``decode_step`` (one new
 token against a KV/recurrent cache of seq_len), per the assignment.
+
+``greedy_decode`` rides the serving engine's fused decode loop
+(serve/engine.py): the whole generation runs as jitted ``lax.scan`` blocks
+instead of a per-token Python loop. The old loop survives as
+``greedy_decode_per_token`` — the benchmark baseline that
+benchmarks/bench_serving.py compares the fused path against.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import decode_step as _decode
 from repro.models import prefill as _prefill
@@ -27,7 +34,33 @@ def make_decode_step(cfg, rcfg):
 
 
 def greedy_decode(cfg, rcfg, params, batch, *, steps: int, max_len: int):
-    """Simple batched greedy loop (example/serving driver use)."""
+    """Batched greedy generation through the serving engine (fused scan).
+
+    One request per batch row, all admitted at once; returns (B, steps)
+    int32 — identical tokens to the per-token reference loop below.
+    """
+    from repro.serve import Request, ServeEngine
+
+    if cfg.embed_inputs:
+        raise NotImplementedError("greedy loop needs a token frontend")
+    tokens = np.asarray(batch["tokens"])
+    B = tokens.shape[0]
+    # token 0 comes from the prefill logits, so the scan decodes steps - 1
+    engine = ServeEngine(cfg, rcfg, params, max_slots=B,
+                         max_len=max_len, decode_block=max(1, steps - 1))
+    requests = []
+    for i in range(B):
+        img = None
+        if cfg.vision_tokens:
+            img = np.asarray(batch["image_embeds"][i])
+        requests.append(Request(uid=i, tokens=tokens[i].tolist(),
+                                max_new_tokens=steps, image_embeds=img))
+    results = engine.run(requests)
+    return jnp.asarray(np.stack([results[i].tokens for i in range(B)]), jnp.int32)
+
+
+def greedy_decode_per_token(cfg, rcfg, params, batch, *, steps: int, max_len: int):
+    """The pre-engine per-token Python loop (benchmark baseline only)."""
     logits, caches = _prefill(cfg, rcfg, params, batch, max_len)
     B = logits.shape[0]
     if cfg.embed_inputs:
