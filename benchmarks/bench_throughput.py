@@ -48,6 +48,9 @@ def run(budget: str = "small"):
     note(f"[table2] PAMM step overhead {deg:.1f}% at {arch} scale "
          f"(fwd {100 * (rows['pamm_f'] / rows['none_f'] - 1):.1f}%, "
          f"fwd+bwd {100 * (rows['pamm_fb'] / rows['none_fb'] - 1):.1f}%)")
+    # The train-step attention-backend split (Pallas FA2 fwd+bwd kernels vs
+    # this jnp sdpa path) is the companion harness: train_attn_kernel in
+    # run.py -> benchmarks/bench_train_attn.py::compare_train_step.
 
 
 if __name__ == "__main__":

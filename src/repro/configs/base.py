@@ -181,12 +181,14 @@ class RunConfig:
     flash_sdp: bool = True           # FlashAttention memory semantics: recompute
                                      # scores/probs in backward (paper App. D.1
                                      # baseline trains with FlashAttention-2)
-    attn_kernel: str = "auto"        # serving attention backend: auto | pallas |
-                                     # jnp. auto = Pallas kernels on TPU, jnp
-                                     # oracles elsewhere (prefill uses kernels/
-                                     # flash_attention.py, decode kernels/
-                                     # flash_decode.py; training always keeps
-                                     # the differentiable chunked sdpa)
+    attn_kernel: str = "auto"        # attention backend: auto | pallas | jnp.
+                                     # auto = Pallas kernels on TPU, jnp
+                                     # oracles elsewhere. Governs TRAINING and
+                                     # prefill (kernels/flash_attention.py —
+                                     # fwd+bwd custom_vjp, so jax.grad runs
+                                     # Pallas both directions) and decode
+                                     # (kernels/flash_decode.py). jnp training
+                                     # = chunked sdpa with flash_sdp remat.
     grad_compress: str = "none"      # none | int8_ef (error-feedback int8 all-reduce)
     pad_vocab_multiple: int = 0      # pad embed/head vocab dim to a multiple
                                      # (0 = off). Odd vocabs (49155, 50280)

@@ -14,10 +14,14 @@ import jax.numpy as jnp
 from repro.core.pamm import PammState
 from repro.kernels import pamm_apply as _apply_k
 from repro.kernels import pamm_compress as _compress_k
-from repro.kernels.flash_attention import flash_attention  # re-export
+from repro.kernels.flash_attention import (  # re-export
+    flash_attention,
+    flash_attention_fwd,
+)
 from repro.kernels.flash_decode import flash_decode  # re-export
 
-__all__ = ["pamm_compress", "pamm_apply", "flash_attention", "flash_decode", "on_tpu"]
+__all__ = ["pamm_compress", "pamm_apply", "flash_attention",
+           "flash_attention_fwd", "flash_decode", "on_tpu"]
 
 
 def on_tpu() -> bool:

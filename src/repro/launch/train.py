@@ -41,6 +41,11 @@ def main(argv=None):
                     help="CompressionPlan spec, e.g. "
                          "'attn.qkv=pamm(r=1/512);ffn.*=compact(r=1/4)'; "
                          "overrides --policy/--ratio (DESIGN.md §2)")
+    ap.add_argument("--attn-kernel", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="attention backend for the train step: Pallas "
+                         "FlashAttention-2 fwd+bwd kernels or the chunked "
+                         "jnp sdpa (auto = pallas on TPU)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -54,6 +59,7 @@ def main(argv=None):
         compression=args.compression,
         policy_name=args.policy, pamm_ratio=1.0 / args.ratio, lr=args.lr,
         compute_dtype="float32", param_dtype="float32",
+        attn_kernel=args.attn_kernel,
     )
     stream = SyntheticStream.for_arch(cfg, args.seq_len, args.global_batch)
     state, specs = init_train_state(cfg, rcfg, jax.random.key(rcfg.seed))

@@ -9,10 +9,12 @@ Covers every attention variant in the assigned architectures:
   * cross-attention over precomputed image embeddings (llama-3.2-vision)
     with tanh gating.
 
-The training path never materializes the (L, L) score matrix: it scans over
-query blocks of ``chunk`` rows (FlashAttention-style memory behaviour; the
-Pallas kernel in kernels/flash_attention.py is the TPU-optimized version
-and uses this code path's math as its oracle).
+The training path never materializes the (L, L) score matrix. Backend per
+``RunConfig.attn_kernel``: the Pallas FlashAttention-2 fwd+bwd kernel pair
+(kernels/flash_attention.py, a custom_vjp — Pallas in both directions), or
+the chunked jnp sdpa that scans over query blocks of ``chunk`` rows and
+recomputes scores in backward via ``jax.checkpoint`` (FlashAttention-style
+memory semantics; also the kernels' differential oracle).
 
 PAMM hooks: the Q/K/V projections run through the ``attn.qkv`` site of the
 run's CompressionPlan (``SiteCtx.apply_shared``) — one compressed state per
@@ -37,10 +39,12 @@ NEG_INF = -1e30
 def use_attn_kernel(rcfg) -> bool:
     """Resolve RunConfig.attn_kernel: pallas | jnp | auto (= pallas on TPU).
 
-    The single policy point for serving attention backends — every Pallas/
-    jnp fork (prefill flash_attention, decode flash_decode) takes its
-    decision from here, with ``pallas`` off-TPU meaning interpret mode
-    (tests only; far too slow to serve with).
+    The single policy point for attention backends — every Pallas/jnp fork
+    (training fwd+bwd and prefill via flash_attention, decode via
+    flash_decode) takes its decision from here, with ``pallas`` off-TPU
+    meaning interpret mode (tests only; far too slow to train/serve with).
+    The flash kernel pair carries a custom VJP (kernels/flash_attention.py),
+    so the *differentiated* training path may take it too.
     """
     mode = getattr(rcfg, "attn_kernel", "auto")
     if mode == "pallas":
@@ -203,9 +207,14 @@ def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
                flash_sdp: bool = True, kernel: bool = False):
     """Self-attention over a full sequence (training / prefill math).
 
-    ``kernel=True`` runs the Pallas FlashAttention-2 kernel instead of the
-    chunked jnp sdpa. The kernel is forward-only (no custom VJP), so callers
-    enable it only on non-differentiated paths — serving prefill.
+    ``kernel=True`` runs the Pallas FlashAttention-2 fwd+bwd kernel pair
+    instead of the chunked jnp sdpa. The pair ships a ``jax.custom_vjp``
+    (kernels/flash_attention.py) whose backward recomputes probabilities
+    tile-by-tile from the saved (q, k, v, o, lse), so ``jax.grad`` through
+    this path runs Pallas in both directions — training and prefill share
+    it. The kernel masks by iota, i.e. it assumes contiguous ``arange``
+    positions (true for the training batch and prefill; ``positions`` here
+    only feeds RoPE on that path).
     """
     q, k, v = _project_qkv(params, x, x, ctx, key, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -215,6 +224,12 @@ def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
 
         out = flash_attention(q, k, v, causal=True, window=window,
                               interpret=not on_tpu())
+        # The kernel masks by iota (contract: positions == arange, which
+        # every in-tree caller satisfies). Padded batches mark dead slots
+        # with positions == -1 — the sdpa path masks them per-score; here
+        # we at least zero their query rows so a future packed/padded
+        # caller cannot silently read attended garbage.
+        out = jnp.where(positions[..., None, None] >= 0, out, 0.0)
     else:
         sdp = lambda q_, k_, v_: sdpa(
             q_, k_, v_, positions, positions, causal=True, window=window, chunk=chunk

@@ -85,9 +85,10 @@ def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
             params["attn"], h, positions, cfg, ctx, key,
             window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
             flash_sdp=rcfg.flash_sdp,
-            # Pallas prefill: the kernel is forward-only, so only the
-            # non-differentiated cache-building path may take it.
-            kernel=want_cache and attn_lib.use_attn_kernel(rcfg),
+            # The flash kernel pair has a custom VJP (fwd+bwd Pallas), so
+            # RunConfig.attn_kernel governs the differentiated training
+            # path and prefill alike.
+            kernel=attn_lib.use_attn_kernel(rcfg),
         )
         x = x + out
         if want_cache:

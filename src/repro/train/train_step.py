@@ -13,6 +13,12 @@ resolved ONCE here — with the mesh, when given, so shard-local blocking and
 backend choice are derived from the deployment rather than threaded flags.
 Per-site telemetry (stored bytes / kept fraction / beta) lands in the
 returned metrics under ``site/<path>/...``.
+
+Attention inside the differentiated loss follows ``rcfg.attn_kernel``:
+the Pallas FlashAttention-2 fwd+bwd pair (kernels/flash_attention.py) or
+the chunked jnp sdpa with flash_sdp remat — both compose with the plan's
+PAMM-compressed QKV custom_vjp, so on TPU the whole train step's attention
+math runs as Pallas kernels in forward AND backward.
 """
 from __future__ import annotations
 

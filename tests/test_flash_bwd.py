@@ -1,0 +1,209 @@
+"""Gradient-parity differential suite for the FlashAttention-2 backward
+Pallas kernels (kernels/flash_attention.py custom_vjp).
+
+``jax.grad`` of the flash kernel pair vs the jnp sdpa oracle over the
+matrix {GQA, MQA, MHA} x {causal, sliding-window} x {L odd / tail-padded,
+bq != bk tilings} x {float32, bfloat16}, in interpret mode so the kernel
+bodies execute on CPU CI. Also pins:
+
+  * the saved lse residual vs ``logsumexp`` of the oracle's scores,
+  * the PR-2 bq != bk independent-padding fix against the new backward
+    grids (tail keys must receive nonzero dk/dv),
+  * grads through ``attn_train`` (kernel path) vs the jnp sdpa path with
+    PAMM compression enabled on the QKV sites — the acceptance criterion.
+"""
+import functools
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_fwd
+from repro.models.attention import sdpa
+
+F32_TOL = 1e-5   # acceptance: dq/dk/dv within 1e-5 (f32) of the oracle
+BF16_TOL = 2e-2  # ... and 2e-2 (bf16)
+
+
+def _rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+
+
+def _qkv(B, L, H, KV, dh, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, L, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, L, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, L, KV, dh), dtype)
+    return q, k, v
+
+
+def _oracle(q, k, v, *, causal, window):
+    """The chunked jnp sdpa — the training path's math, used as the
+    differential oracle (upcasts to f32 internally like the kernel)."""
+    B, L = q.shape[0], q.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    return sdpa(q, k, v, pos, pos, causal=causal, window=window, chunk=32)
+
+
+def _grads(fn, q, k, v):
+    """dq/dk/dv of a scalar loss that weights every output element
+    differently (sum() alone would miss sign errors that cancel)."""
+    w = (jax.random.normal(jax.random.key(99), q.shape) /
+         np.sqrt(q.size)).astype(jnp.float32)
+
+    def loss(q_, k_, v_):
+        return jnp.sum(fn(q_, k_, v_).astype(jnp.float32) * w)
+
+    return jax.grad(loss, (0, 1, 2))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix
+# ---------------------------------------------------------------------------
+HEAD_LAYOUTS = [
+    pytest.param(4, 2, id="gqa"),
+    pytest.param(4, 1, id="mqa"),
+    pytest.param(4, 4, id="mha"),
+]
+MASKS = [
+    pytest.param(True, 0, id="causal"),
+    pytest.param(True, 16, id="sliding-window"),
+]
+TILINGS = [
+    # (L, bq, bk): odd / tail-padded lengths and bq != bk in both directions
+    pytest.param(128, 64, 64, id="even-tiles"),
+    pytest.param(80, 32, 64, id="tail-bq<bk"),
+    pytest.param(100, 64, 32, id="tail-bq>bk"),
+]
+
+
+@pytest.mark.parametrize("H,KV", HEAD_LAYOUTS)
+@pytest.mark.parametrize("causal,window", MASKS)
+@pytest.mark.parametrize("L,bq,bk", TILINGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_grad_parity(H, KV, causal, window, L, bq, bk, dtype):
+    B, dh = 2, 64
+    q, k, v = _qkv(B, L, H, KV, dh, dtype)
+    flash = functools.partial(flash_attention, causal=causal, window=window,
+                              bq=bq, bk=bk)
+    oracle = functools.partial(_oracle, causal=causal, window=window)
+    tol = BF16_TOL if dtype == jnp.bfloat16 else F32_TOL
+    for name, mine, ref in zip(
+        ("dq", "dk", "dv"), _grads(flash, q, k, v), _grads(oracle, q, k, v)
+    ):
+        assert mine.dtype == ref.dtype == dtype
+        assert _rel(mine, ref) < tol, f"{name} rel err {_rel(mine, ref):.2e}"
+
+
+@pytest.mark.parametrize("H,KV", HEAD_LAYOUTS)
+@pytest.mark.parametrize("causal,window", MASKS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_lse_matches_oracle_logsumexp(H, KV, causal, window, dtype):
+    """The saved lse residual == logsumexp over each row's visible keys."""
+    B, L, dh = 1, 80, 64  # odd L: padded rows must not leak into [:L]
+    q, k, v = _qkv(B, L, H, KV, dh, dtype, seed=1)
+    _, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 bq=32, bk=64)
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, L, KV, G, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(L)
+    mask = pos[None, :] <= pos[:, None] if causal else jnp.ones((L, L), bool)
+    if window > 0:
+        mask = mask & (pos[:, None] - pos[None, :] < window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    want = jax.scipy.special.logsumexp(scores, axis=-1)       # (B, KV, G, L)
+    want = want.reshape(B, H, L)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# bq != bk regression, now against the backward grids
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,bq,bk", [(96, 64, 32), (80, 32, 64), (100, 64, 64)])
+def test_flash_bwd_bq_ne_bk_tail_keys_get_grads(L, bq, bk):
+    """PR-2 regression, backward edition: mismatched block sizes mis-sized
+    the kv grid and dropped tail keys — in backward that would zero (or
+    worse, skip) dk/dv for the tail. Pin nonzero tail grads + full parity."""
+    B, H, KV, dh = 2, 4, 2, 64
+    q, k, v = _qkv(B, L, H, KV, dh, jnp.float32, seed=2)
+    flash = functools.partial(flash_attention, causal=True, bq=bq, bk=bk)
+    oracle = functools.partial(_oracle, causal=True, window=0)
+    (dq, dk, dv) = _grads(flash, q, k, v)
+    (dq_r, dk_r, dv_r) = _grads(oracle, q, k, v)
+    tail = slice(L - (L % min(bq, bk) or min(bq, bk)), L)
+    # tail keys are attended by the final queries: their grads must be live
+    assert float(jnp.abs(dk[:, tail]).max()) > 0
+    assert float(jnp.abs(dv[:, tail]).max()) > 0
+    for mine, ref in ((dq, dq_r), (dk, dk_r), (dv, dv_r)):
+        assert _rel(mine, ref) < F32_TOL
+
+
+# ---------------------------------------------------------------------------
+# attn_train kernel path: grads with PAMM-compressed QKV (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window", [0, 16], ids=["causal", "sliding-window"])
+def test_attn_train_kernel_grads_match_jnp_path(window):
+    """jax.grad through attn_train(kernel path) == the chunked-sdpa path,
+    with PAMM compression enabled on the attn.qkv site. Weight grads flow
+    through pamm_apply(state, d(qkv)) — identical states both paths — so
+    any divergence isolates to the attention backward."""
+    from repro.configs import RunConfig, get_config
+    from repro.core.plan import resolve_for_run
+    from repro.models import attention as attn_lib
+
+    cfg = get_config("llama-tiny")
+    rcfg = RunConfig(policy_name="pamm", pamm_ratio=1 / 8,
+                     compute_dtype="float32", param_dtype="float32")
+    resolved = resolve_for_run(cfg, rcfg)
+    params, _ = attn_lib.init_attention(jax.random.key(3), cfg, jnp.float32)
+    B, L = 2, 80  # odd L: tail-padded in the kernel path
+    x = jax.random.normal(jax.random.key(4), (B, L, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    w = jax.random.normal(jax.random.key(5), (B, L, cfg.d_model)) / (B * L)
+
+    def loss(p, x_, kernel):
+        ctx = resolved.ctx(0, "attn", None)
+        out, _ = attn_lib.attn_train(
+            p, x_, positions, cfg, ctx, jax.random.key(6),
+            window=window, chunk=32, kernel=kernel)
+        return jnp.sum(out * w)
+
+    g_kern = jax.grad(loss, (0, 1))(params, x, True)
+    g_jnp = jax.grad(loss, (0, 1))(params, x, False)
+    flat_k, _ = jax.flatten_util.ravel_pytree(g_kern)
+    flat_j, _ = jax.flatten_util.ravel_pytree(g_jnp)
+    assert _rel(flat_k, flat_j) < F32_TOL
+
+
+def test_loss_grads_match_full_model_pamm():
+    """Full train loss: every parameter's grad matches between attention
+    backends, PAMM on, across a multi-layer model (acceptance criterion)."""
+    from repro.configs import RunConfig, get_config
+    from repro.data import SyntheticStream
+    from repro.models import loss_fn
+    from repro.train import init_train_state
+
+    cfg = get_config("llama-tiny")
+    stream = SyntheticStream.for_arch(cfg, 48, 2)
+    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()}
+    grads = {}
+    for mode in ("jnp", "pallas"):
+        rcfg = RunConfig(policy_name="pamm", pamm_ratio=1 / 8,
+                         compute_dtype="float32", param_dtype="float32",
+                         attn_kernel=mode)
+        state, _ = init_train_state(cfg, rcfg, jax.random.key(0))
+        (loss, _), g = jax.value_and_grad(
+            lambda p: loss_fn(cfg, rcfg, None, p, batch, jax.random.key(1)),
+            has_aux=True)(state.params)
+        grads[mode] = (float(loss), g)
+    assert abs(grads["jnp"][0] - grads["pallas"][0]) < 1e-5
+    for a, b in zip(jax.tree.leaves(grads["jnp"][1]),
+                    jax.tree.leaves(grads["pallas"][1])):
+        assert _rel(a, b) < 1e-4

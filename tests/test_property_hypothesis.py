@@ -15,11 +15,32 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.pamm import pamm_apply, pamm_compress, pamm_reconstruct
 from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pamm_apply import segment_matmul
 from repro.kernels.pamm_compress import csim_argmax
 from repro.runtime.grad_compress import ef_dequantize, ef_quantize
 
 SETTINGS = dict(max_examples=20, deadline=None)
+
+# Flash-kernel shape strategy: random B/L/H/KV/dh within tile bounds — dh
+# a lane-friendly multiple of 8, KV drawn as a divisor of H (GQA/MQA/MHA),
+# L free so odd lengths exercise independent bq/bk tail padding. Kept
+# small: interpret mode executes the full fwd+bwd grids on CPU.
+FLASH_SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@st.composite
+def flash_shapes(draw):
+    B = draw(st.integers(1, 2))
+    L = draw(st.integers(2, 96))
+    H = draw(st.sampled_from([1, 2, 4, 8]))
+    KV = draw(st.sampled_from([d for d in (1, 2, 4, 8) if H % d == 0]))
+    dh = draw(st.sampled_from([8, 16, 32, 64]))
+    bq = draw(st.sampled_from([16, 32, 64]))
+    bk = draw(st.sampled_from([16, 32, 64]))
+    causal = draw(st.booleans())
+    window = draw(st.sampled_from([0, 0, 7, 24])) if causal else 0
+    return B, L, H, KV, dh, bq, bk, causal, window
 
 
 @settings(**SETTINGS)
@@ -135,3 +156,49 @@ def test_ef_feedback_accumulates(seed):
         total = total + ef_dequantize(q, scale)
     np.testing.assert_allclose(np.asarray(total / steps), np.asarray(g),
                                atol=float(jnp.max(jnp.abs(g))) * 0.02 + 1e-4)
+
+
+def _flash_oracle(q, k, v, *, causal, window):
+    """jnp sdpa over arange positions — same math attn_train differentiates."""
+    from repro.models.attention import sdpa
+
+    B, L = q.shape[0], q.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    return sdpa(q, k, v, pos, pos, causal=causal, window=window, chunk=32)
+
+
+@settings(**FLASH_SETTINGS)
+@given(shape=flash_shapes(), seed=st.integers(0, 2**30))
+def test_flash_forward_parity_all_shapes(shape, seed):
+    B, L, H, KV, dh, bq, bk, causal, window = shape
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, L, H, dh))
+    k = jax.random.normal(ks[1], (B, L, KV, dh))
+    v = jax.random.normal(ks[2], (B, L, KV, dh))
+    o = flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk)
+    o_r = _flash_oracle(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), atol=2e-5)
+
+
+@settings(**FLASH_SETTINGS)
+@given(shape=flash_shapes(), seed=st.integers(0, 2**30))
+def test_flash_grad_of_sum_parity_all_shapes(shape, seed):
+    """grad of sum(flash(q,k,v)) == grad of sum(oracle) for all sampled
+    shapes — dq, dk and dv each, through the Pallas backward kernels."""
+    B, L, H, KV, dh, bq, bk, causal, window = shape
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, L, H, dh))
+    k = jax.random.normal(ks[1], (B, L, KV, dh))
+    v = jax.random.normal(ks[2], (B, L, KV, dh))
+
+    def f(q_, k_, v_):
+        return flash_attention(q_, k_, v_, causal=causal, window=window,
+                               bq=bq, bk=bk).sum()
+
+    def g(q_, k_, v_):
+        return _flash_oracle(q_, k_, v_, causal=causal, window=window).sum()
+
+    for mine, oracle in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                            jax.grad(g, (0, 1, 2))(q, k, v)):
+        denom = max(float(jnp.linalg.norm(oracle)), 1e-12)
+        assert float(jnp.linalg.norm(mine - oracle)) / denom < 1e-5
