@@ -1,0 +1,121 @@
+"""Multi-device scaling: step time / tok/s vs mesh shape, and bytes on the
+wire for the DP gradient all-reduce (int8-EF vs bf16).
+
+Forced host devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+must be set before jax initializes, and the rest of the benchmark suite
+runs single-device in-process — so this harness re-execs itself as a
+worker subprocess per mesh shape:
+
+    python -m benchmarks.bench_scaling            # all shapes (via run())
+    python -m benchmarks.bench_scaling --worker --mesh 2,2 --grad-compress none
+
+CPU caveat printed with the rows: forced host "devices" share one CPU, so
+tok/s here measures partitioning overhead, not speedup — the interesting
+columns are step-time scaling across mesh shapes and the wire-byte
+accounting (which is analytic and platform-independent: the int8 payload
+is what crosses a real interconnect; see runtime/grad_compress.py).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+ARCH = "llama-tiny"
+SEQ = 64
+GLOBAL_BATCH = 8
+STEPS = 8
+DEVICES = 8
+
+
+def _worker(mesh_shape: str, grad_compress: str) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import RunConfig, get_config
+    from repro.data import SyntheticStream
+    from repro.launch.mesh import make_debug_mesh
+    from repro.runtime import sharding as sh
+    from repro.runtime.grad_compress import allreduce_wire_bytes
+    from repro.train import init_distributed_state, make_shard_map_train_step
+
+    data, model = (int(x) for x in mesh_shape.split(","))
+    cfg = get_config(ARCH)
+    rcfg = RunConfig(
+        compression="attn.qkv=pamm(r=1/8)", lr=3e-3,
+        compute_dtype="float32", param_dtype="float32",
+        grad_compress=grad_compress,
+    )
+    mesh = make_debug_mesh(data, model)
+    state, _ = init_distributed_state(cfg, rcfg, jax.random.key(0), mesh)
+    step = make_shard_map_train_step(cfg, rcfg, total_steps=STEPS, mesh=mesh)
+    stream = SyntheticStream.for_arch(cfg, SEQ, GLOBAL_BATCH)
+    batches = [
+        {k: jnp.asarray(v) for k, v in stream.get_batch(i).items()}
+        for i in range(STEPS)
+    ]
+    state, m = step(state, batches[0], jnp.int32(0))  # compile + warm
+    jax.block_until_ready(m["loss"])
+    t0 = time.monotonic()
+    for i in range(1, STEPS):
+        state, m = step(state, batches[i], jnp.int32(i))
+    jax.block_until_ready(m["loss"])
+    dt = (time.monotonic() - t0) / (STEPS - 1)
+    tok_s = GLOBAL_BATCH * SEQ / dt
+    dp = sh.dp_degree(mesh)
+    wire = allreduce_wire_bytes(
+        state.params, dp, "int8_ef" if grad_compress == "int8_ef" else "bf16")
+    name = f"scaling_d{data}m{model}_{grad_compress}"
+    print(f"{name},{dt * 1e6:.0f},tok_s={tok_s:.0f};wire_mb_per_step="
+          f"{wire / 1e6:.3f};loss={float(m['loss']):.4f}", flush=True)
+
+
+def run(budget: str = "small") -> None:
+    shapes = ["1,1", "2,1", "4,1", "2,2"]
+    if budget == "full":
+        shapes += ["8,1", "4,2"]
+    print("# forced-host-device scaling (8 fake CPU devices share one core: "
+          "read step-time ratios + wire bytes, not absolute tok/s)")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={DEVICES}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    for shape in shapes:
+        schemes = ["none"] if shape.startswith("1,") else ["none", "int8_ef"]
+        for gc in schemes:
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_scaling", "--worker",
+                 "--mesh", shape, "--grad-compress", gc],
+                capture_output=True, text=True, env=env, cwd=root, timeout=900,
+            )
+            out = proc.stdout.strip()
+            if proc.returncode != 0 or not out:
+                tail = (proc.stderr or "").strip().splitlines()[-1:] or ["?"]
+                print(f"scaling_{shape.replace(',', 'x')}_{gc},0.0,"
+                      f"ERROR:{tail[0][:120]}", flush=True)
+            else:
+                print(out, flush=True)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--mesh", default="2,2")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--budget", default="small")
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.mesh, args.grad_compress)
+    else:
+        run(budget=args.budget)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ HARNESSES = [
     ("appH_l2_error_coverage", "benchmarks.bench_l2_error"),
     ("appJ_complexity", "benchmarks.bench_complexity"),
     ("serving_engine", "benchmarks.bench_serving"),
+    ("multidevice_scaling", "benchmarks.bench_scaling"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -190,6 +191,15 @@ class CompressedSite:
     # (ffn.up sharing ffn.gate's state when their policies agree, Fig. 2).
     # Shared sites have no telemetry of their own — stats live on the owner.
     shared_with: str | None = None
+    # Optional override for the site key derivation: ``key_fn(key, site_id)``
+    # replaces the default ``fold_in(key, site_id)``. The shard_map executor
+    # (train/distributed.py) uses this to give every data-parallel shard the
+    # PRNG stream of *its* block of the blocked single-device formulation —
+    # shards stay decorrelated AND bit-compatible with ``blocks=dp``. May
+    # close over tracers (it only ever runs at trace time), so it is kept
+    # out of equality/repr: two sites differing only here are "the same
+    # site" for plan purposes.
+    key_fn: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def is_exact(self) -> bool:
@@ -200,6 +210,8 @@ class CompressedSite:
         per-block step key (replaces ad-hoc ``fold_in(key, 1)`` call sites)."""
         if key is None:
             return None
+        if self.key_fn is not None:
+            return self.key_fn(key, self.site_id)
         return jax.random.fold_in(key, self.site_id)
 
     def apply(self, x, w, bias, key):

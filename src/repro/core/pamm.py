@@ -139,9 +139,16 @@ def pamm_compress_blocked(
     Stored bytes are identical (same total k). Returns a PammState whose
     leading axes are stacked blocks: generators (S, k_loc, n), alpha (S,
     b_loc), assign (S, b_loc), beta (S,).
+
+    ``k < n_blocks`` does NOT fall back to a global compress: every block
+    keeps at least one generator (k_loc = max(1, k // n_blocks)), so the
+    shard-local semantics — and bit-compatibility with the shard_map
+    executor, whose shards each compress their own rows — hold at any
+    ratio. Only a token axis the blocks cannot divide degrades to the
+    single-block formulation.
     """
     b, n = a.shape
-    if n_blocks <= 1 or b % n_blocks or k < n_blocks:
+    if n_blocks <= 1 or b % n_blocks:
         st = pamm_compress(a, k, eps, key, compute_dtype=compute_dtype)
         return PammState(
             st.generators[None], st.alpha[None], st.assign[None], st.beta[None]

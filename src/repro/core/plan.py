@@ -261,11 +261,11 @@ def _pattern_plausible(pattern: str) -> bool:
 def _mesh_data_degree(mesh) -> int:
     if mesh is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    deg = 1
-    for ax in ("pod", "data"):
-        deg *= sizes.get(ax, 1)
-    return deg
+    # single source of truth with the shard_map executor: blocks=auto must
+    # resolve to the same degree the executor shards/splits keys over
+    from repro.runtime.sharding import dp_degree
+
+    return dp_degree(mesh)
 
 
 def _default_backend() -> str:
@@ -395,6 +395,29 @@ class ResolvedPlan:
     @property
     def compressed_sites(self) -> tuple[CompressedSite, ...]:
         return tuple(s for s in self.sites if not s.is_exact)
+
+    def with_site_key_fn(self, key_fn) -> "ResolvedPlan":
+        """A copy whose sites derive their PRNG via ``key_fn(key, site_id)``
+        instead of the default ``fold_in(key, site_id)``.
+
+        Used by the shard_map executor to hand each data shard the stream of
+        its block in the blocked single-device formulation. ``key_fn`` may
+        close over tracers — call this inside the trace that consumes it."""
+        return ResolvedPlan(
+            sites=tuple(dataclasses.replace(s, key_fn=key_fn) for s in self.sites),
+            plan=self.plan,
+        )
+
+    def map_policies(self, fn) -> "ResolvedPlan":
+        """A copy with ``fn(policy)`` applied to every non-exact site policy
+        (e.g. localizing blocked PAMM to per-shard blocks)."""
+        return ResolvedPlan(
+            sites=tuple(
+                s if s.is_exact else dataclasses.replace(s, policy=fn(s.policy))
+                for s in self.sites
+            ),
+            plan=self.plan,
+        )
 
     def zero_telemetry(self) -> dict[str, jax.Array]:
         """Fresh telemetry accumulator: one STATS_LEN vector per compressed

@@ -93,12 +93,21 @@ class PammPolicy(CompressionPolicy):
     use_kernel: bool = False  # route through the Pallas TPU kernels (kernels/ops.py)
     n_blocks: int = 1
     k_max: int | None = None
+    # Per-shard view of a blocked global formulation (the shard_map
+    # executor's localization, train/distributed.py): k is computed as ONE
+    # block's share of a run with b*block_share rows in block_share*n_blocks
+    # blocks, so a shard's generator count equals the jit executor's
+    # ``blocks=dp`` per-block count even when ceil(r*b_global) does not
+    # divide by dp. 1 = plain single-process semantics.
+    block_share: int = 1
 
     def k_for(self, b: int) -> int:
-        k = pamm_lib.num_generators(b, self.ratio)
+        f = max(1, self.block_share)
+        k = pamm_lib.num_generators(b * f, self.ratio)
         if self.k_max is not None:
-            k = min(k, max(self.n_blocks, self.k_max * max(1, self.n_blocks)))
-        return k
+            nb = max(1, self.n_blocks) * f
+            k = min(k, max(nb, self.k_max * nb))
+        return max(1, k // f)
 
     def compress(self, x2d, key):
         b = x2d.shape[0]

@@ -24,7 +24,12 @@ from repro.launch.mesh import make_debug_mesh
 from repro.models import param_specs
 from repro.runtime import sharding as sh
 from repro.runtime.fault import StragglerWatchdog, run_supervised
-from repro.train import init_train_state, make_train_step
+from repro.train import (
+    init_distributed_state,
+    init_train_state,
+    make_shard_map_train_step,
+    make_train_step,
+)
 
 
 def main(argv=None):
@@ -52,6 +57,16 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--data-model", type=int, nargs=2, default=None,
                     metavar=("DATA", "MODEL"), help="debug mesh shape")
+    ap.add_argument("--executor", default="jit", choices=["jit", "shard_map"],
+                    help="jit = one GSPMD program (single-process default); "
+                         "shard_map = explicit DP x TP executor "
+                         "(train/distributed.py): per-shard fwd/bwd, manual "
+                         "gradient all-reduce (optionally int8-EF "
+                         "compressed), ZeRO-1 optimizer sharding")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8_ef"],
+                    help="DP gradient all-reduce compression "
+                         "(shard_map executor only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -59,29 +74,49 @@ def main(argv=None):
         compression=args.compression,
         policy_name=args.policy, pamm_ratio=1.0 / args.ratio, lr=args.lr,
         compute_dtype="float32", param_dtype="float32",
-        attn_kernel=args.attn_kernel,
+        attn_kernel=args.attn_kernel, grad_compress=args.grad_compress,
     )
     stream = SyntheticStream.for_arch(cfg, args.seq_len, args.global_batch)
-    state, specs = init_train_state(cfg, rcfg, jax.random.key(rcfg.seed))
 
     mesh = None
-    if args.data_model:
-        mesh = make_debug_mesh(*args.data_model)
-        param_sh = sh.spec_tree_to_shardings(specs, mesh)
-        state = state._replace(
-            params=jax.device_put(state.params, param_sh),
-            opt=state.opt,
-        )
-    # plan resolution sees the mesh: shard-local PAMM blocking (blocks=auto)
-    # and backend selection are derived here, not threaded as flags.
-    step_fn = make_train_step(cfg, rcfg, total_steps=args.steps, mesh=mesh)
-    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+    batch_sharding = None
+    if args.executor == "shard_map":
+        # default mesh: all visible devices on the data axis
+        dm = args.data_model or (len(jax.devices()), 1)
+        mesh = make_debug_mesh(*dm)
+        sh.validate_batch_divisible(args.global_batch, mesh,
+                                    grad_accum=rcfg.grad_accum, where="launch")
+        state, specs = init_distributed_state(
+            cfg, rcfg, jax.random.key(rcfg.seed), mesh)
+        # already jitted with ZeRO-1 out_shardings + donated state
+        step_fn = make_shard_map_train_step(
+            cfg, rcfg, total_steps=args.steps, mesh=mesh)
+        batch_sharding = jax.sharding.NamedSharding(mesh, sh.data_pspec(mesh))
+    else:
+        state, specs = init_train_state(cfg, rcfg, jax.random.key(rcfg.seed))
+        if args.data_model:
+            mesh = make_debug_mesh(*args.data_model)
+            sh.validate_batch_divisible(args.global_batch, mesh,
+                                        grad_accum=rcfg.grad_accum,
+                                        where="launch")
+            param_sh = sh.spec_tree_to_shardings(specs, mesh)
+            state = state._replace(
+                params=jax.device_put(state.params, param_sh),
+                opt=state.opt,
+            )
+        # plan resolution sees the mesh: shard-local PAMM blocking
+        # (blocks=auto) and backend selection are derived here, not
+        # threaded as flags.
+        step_fn = make_train_step(cfg, rcfg, total_steps=args.steps, mesh=mesh)
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     holder = {"state": state, "metrics": None}
     watchdog = StragglerWatchdog()
 
     def one_step(step: int):
         batch = {k: jnp.asarray(v) for k, v in stream.get_batch(step).items()}
+        if batch_sharding is not None:
+            batch = jax.device_put(batch, batch_sharding)
         holder["state"], m = step_fn(holder["state"], batch, jnp.int32(step))
         holder["metrics"] = m
         if step % args.log_every == 0:

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core.plan import SiteCtx, exact_ctx
 from repro.kernels.flash_decode import flash_decode
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
+from repro.runtime.sharding import maybe_constrain
 
 NEG_INF = -1e30
 
@@ -114,6 +115,11 @@ def _project_qkv(params, x, kv_src, ctx: SiteCtx, key, cfg, n_kv_eff):
     q = q.reshape(*x.shape[:-1], h, dh)
     k = k.reshape(*kv_src.shape[:-1], kv, dh)
     v = v.reshape(*kv_src.shape[:-1], kv, dh)
+    # TP anchor: head axis sharded over 'model' between the projections and
+    # the attention math (no-op without a mesh in context).
+    q = maybe_constrain(q, ("batch", None, "heads", None))
+    k = maybe_constrain(k, ("batch", None, "heads", None))
+    v = maybe_constrain(v, ("batch", None, "heads", None))
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)

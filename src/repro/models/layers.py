@@ -102,6 +102,11 @@ def ffn_sites(params, x, ctx, key):
         g = ctx.apply("ffn.gate", x, params["w_gate"], None, key)
         u = ctx.apply("ffn.up", x, params["w_up"], None, key)
     h = jax.nn.silu(g) * u
+    # TP anchor: SwiGLU hidden sharded over 'model' so the down projection
+    # closes with one all-reduce (no-op without a mesh in context).
+    from repro.runtime.sharding import maybe_constrain
+
+    h = maybe_constrain(h, ("batch", None, "ffn"))
     return ctx.apply("ffn.down", h, params["w_down"], None, key)
 
 
@@ -182,10 +187,11 @@ def chunked_cross_entropy(h, w_head, labels, mask, chunk: int,
                 idx + 1, stats_acc), None
 
     from repro.core.linear import STATS_LEN
+    from repro.runtime.sharding import scan_compat
 
     init = (jnp.float32(0), jnp.float32(0), jnp.int32(0),
             jnp.zeros((STATS_LEN,), jnp.float32))
-    (tot, cnt, _, stats), _ = jax.lax.scan(body, init, (hc, lc, mc))
+    (tot, cnt, _, stats), _ = scan_compat(body, init, (hc, lc, mc))
     loss = tot / jnp.maximum(cnt, 1.0)
     if site is not None:
         return loss, stats

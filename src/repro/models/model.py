@@ -176,6 +176,8 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
         stage_key = jax.random.fold_in(key, si)
 
         def body(carry, xs, si=si):
+            from repro.runtime.sharding import maybe_constrain
+
             x_c, aux_c, tele_c = carry
             bparams, k_r = xs
             for bi, kind in enumerate(unit):
@@ -189,9 +191,15 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
                     # Megatron sequence parallelism: between blocks the
                     # residual stream is sharded over (batch, seq->model);
                     # GSPMD inserts the all-gather / reduce-scatter pairs.
-                    from repro.runtime.sharding import maybe_constrain
-
                     x_c = maybe_constrain(x_c, ("batch", "ffn", None))
+                else:
+                    # Block-boundary anchor: the residual stream is
+                    # batch-sharded and REPLICATED over the model axis, so
+                    # GSPMD closes each block's TP with the intended
+                    # all-reduce of the out/down projections instead of
+                    # propagating a model-sharded embed dim downstream.
+                    # No-op without a mesh in context.
+                    x_c = maybe_constrain(x_c, ("batch", None, "embed"))
             return (x_c, aux_c, tele_c), None
 
         if rcfg.remat == "full":
@@ -207,7 +215,11 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
 
         keys = jax.random.split(stage_key, rep)
         if rep > 1:
-            (x, aux, tele), _ = jax.lax.scan(body, (x, aux, tele), (unit_params, keys))
+            # scan_compat: unrolled inside the shard_map executor's body
+            # (grad-of-scan is miscompiled under partial-auto SPMD).
+            from repro.runtime.sharding import scan_compat
+
+            (x, aux, tele), _ = scan_compat(body, (x, aux, tele), (unit_params, keys))
         else:
             sliced = jax.tree.map(lambda t: t[0], unit_params)
             (x, aux, tele), _ = body((x, aux, tele), (sliced, keys[0]))

@@ -30,8 +30,9 @@ def ef_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
-    """All-reduce-mean of g over ``axis_name`` with int8 EF compression.
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name):
+    """All-reduce-mean of g over ``axis_name`` (a name or tuple of names,
+    e.g. ``('pod', 'data')``) with int8 EF compression.
 
     The int8 payload is what travels the interconnect; the f32 psum here is
     of the *dequantized* values because XLA has no int8 all-reduce — the
@@ -44,7 +45,7 @@ def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
     return mean.astype(g.dtype), new_err
 
 
-def tree_compressed_psum(grads, err_tree, axis_name: str):
+def tree_compressed_psum(grads, err_tree, axis_name):
     out = jax.tree.map(lambda g, e: compressed_psum(g, e, axis_name), grads, err_tree)
     new_grads = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
     new_err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
@@ -53,3 +54,27 @@ def tree_compressed_psum(grads, err_tree, axis_name: str):
 
 def init_error_buffers(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+_WIRE_WIDTH = {"bf16": 2, "f32": 4, "int8_ef": 1}
+
+
+def allreduce_wire_bytes(params, dp: int, scheme: str = "bf16") -> int:
+    """Bytes each device moves per step for the DP gradient all-reduce.
+
+    Ring all-reduce moves ``2 * (dp-1)/dp * payload`` bytes per device.
+    ``int8_ef`` pays one int8 per element plus one f32 scale per tensor;
+    ``bf16``/``f32`` pay the full gradient width. ``params`` is any pytree
+    of arrays or ShapeDtypeStructs (only sizes are read).
+    """
+    import math
+
+    if scheme not in _WIRE_WIDTH:
+        raise ValueError(f"scheme must be one of {sorted(_WIRE_WIDTH)}, got {scheme!r}")
+    leaves = jax.tree.leaves(params)
+    payload = sum(math.prod(l.shape) for l in leaves) * _WIRE_WIDTH[scheme]
+    if scheme == "int8_ef":
+        payload += 4 * len(leaves)  # one f32 scale per tensor
+    if dp <= 1:
+        return 0
+    return int(2 * (dp - 1) / dp * payload)

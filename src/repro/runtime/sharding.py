@@ -16,6 +16,9 @@ update into reduce-scatter(grads) + shard-local update + all-gather(params)
 """
 from __future__ import annotations
 
+import contextlib
+import threading
+
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
@@ -188,6 +191,104 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, PS())
 
 
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh's data-parallel axes, in collective order (('pod','data'),
+    ('data',) or () for a pure-TP mesh)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_degree(mesh: Mesh) -> int:
+    """Number of data-parallel shards (product of pod x data sizes)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    deg = 1
+    for a in data_axis_names(mesh):
+        deg *= sizes[a]
+    return deg
+
+
+def data_pspec(mesh: Mesh) -> PS:
+    """PartitionSpec sharding a leading axis over the data axes."""
+    axes = data_axis_names(mesh)
+    if not axes:
+        return PS()
+    return PS(axes if len(axes) > 1 else axes[0])
+
+
+def validate_batch_divisible(global_batch: int, mesh: Mesh, *,
+                             grad_accum: int = 1, where: str = "train step"):
+    """Raise a clear error when the global batch cannot shard over the data
+    axes (the alternative is an opaque XLA "sharding does not evenly divide"
+    failure deep inside device_put / jit)."""
+    dp = dp_degree(mesh)
+    axes = data_axis_names(mesh)
+    if dp > 1 and global_batch % dp:
+        raise ValueError(
+            f"{where}: global batch {global_batch} is not divisible by the "
+            f"data-parallel degree {dp} (mesh axes {axes} of shape "
+            f"{tuple(mesh.devices.shape)}). Pick a global batch that is a "
+            f"multiple of {dp}, or reshape the mesh."
+        )
+    accum = max(1, grad_accum)
+    local = global_batch // max(1, dp)
+    if accum > 1 and local % accum:
+        raise ValueError(
+            f"{where}: per-shard batch {local} (global {global_batch} / "
+            f"dp {dp}) is not divisible by grad_accum={accum}."
+        )
+
+
+# ---------------------------------------------------------------------------
+# shard_map tracing context: manual axes must not appear in constraints
+# ---------------------------------------------------------------------------
+_SM_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def shard_map_ctx(mesh: Mesh, manual_axes: tuple):
+    """Mark that model code is being traced inside a ``shard_map`` body whose
+    ``manual_axes`` are manually sharded (the rest are GSPMD-auto).
+
+    ``maybe_constrain`` then emits explicit NamedSharding constraints against
+    ``mesh`` with the manual axes dropped from the logical rules — inside a
+    partial-auto shard_map a constraint may only name auto axes, and the
+    manual (data) axes are already physically split by the shard_map itself."""
+    prev = getattr(_SM_CTX, "val", None)
+    _SM_CTX.val = (mesh, frozenset(manual_axes))
+    try:
+        yield
+    finally:
+        _SM_CTX.val = prev
+
+
+def _shard_map_context():
+    return getattr(_SM_CTX, "val", None)
+
+
+def scan_compat(body, carry, xs, *, length=None):
+    """``jax.lax.scan`` — unrolled to a Python loop when tracing inside a
+    shard_map body (``shard_map_ctx`` active).
+
+    XLA's SPMD partitioner (this jaxlib line) fails a
+    ``sharding.IsManualSubgroup()`` CHECK when differentiating a scan under
+    partial-auto manual sharding (hlo_sharding_util.cc); unrolling trades
+    HLO size linear in the scan length for a correct lowering. Outside a
+    shard_map body this IS ``lax.scan``, bit for bit.
+    """
+    if _shard_map_context() is None:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    import jax.numpy as jnp
+
+    return carry, jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+
+
 def current_mesh_axis_names() -> tuple[str, ...] | None:
     """Axis names of the mesh currently in context, or None.
 
@@ -212,13 +313,7 @@ def current_mesh_axis_names() -> tuple[str, ...] | None:
     return tuple(pm.axis_names)
 
 
-def maybe_constrain(x, logical: tuple):
-    """with_sharding_constraint using whatever mesh is in context (no-op
-    outside a mesh context — keeps model code mesh-agnostic for CPU tests)."""
-    names = current_mesh_axis_names()
-    if names is None:
-        return x
-    axes = set(names)
+def _rules_pspec(logical: tuple, axes: set) -> PS:
     spec = []
     for name in logical:
         rule = DEFAULT_RULES.get(name)
@@ -227,4 +322,36 @@ def maybe_constrain(x, logical: tuple):
         else:
             picked = tuple(a for a in rule if a in axes)
             spec.append(picked if len(picked) > 1 else (picked[0] if picked else None))
-    return jax.lax.with_sharding_constraint(x, PS(*spec))
+    return PS(*spec)
+
+
+def maybe_constrain(x, logical: tuple):
+    """with_sharding_constraint using whatever mesh is in context (no-op
+    outside a mesh context — keeps model code mesh-agnostic for CPU tests).
+
+    Inside a ``shard_map_ctx`` (the shard_map executor's body), the manual
+    axes are dropped from the rules and an explicit NamedSharding against
+    the executor's mesh is emitted for the remaining (auto/TP) axes."""
+    sm = _shard_map_context()
+    if sm is not None:
+        mesh, manual = sm
+        axes = set(mesh.axis_names) - manual
+        ps = _rules_pspec(logical, axes)
+        # drop entries the dimension cannot divide (MQA kv heads, odd vocab)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        spec = list(tuple(ps) + (None,) * (x.ndim - len(tuple(ps))))
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[a] for a in names]))
+            if x.shape[i] % total:
+                spec[i] = None
+        # An all-None spec is still meaningful here: it pins the value
+        # REPLICATED over the auto (TP) axes — that is exactly the
+        # block-boundary residual anchor — so it is emitted, not skipped.
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PS(*spec)))
+    names = current_mesh_axis_names()
+    if names is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _rules_pspec(logical, set(names)))

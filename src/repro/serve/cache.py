@@ -64,6 +64,38 @@ def slot_bytes(caches, max_slots: int) -> int:
     return cache_bytes(caches) // max(1, max_slots)
 
 
+def shard_slots(caches, mesh):
+    """Lay the engine cache out on ``mesh`` with the slot (batch) axis
+    sharded over the data axes.
+
+    Per-layer scalar leaves (rank <= 1 ring flags) are replicated; every
+    batched leaf — axis 0 layer stack, axis 1 slots — gets the data axes on
+    axis 1. Requires ``max_slots`` divisible by the DP degree (a clear
+    error here beats the opaque XLA one at first decode).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    from repro.runtime import sharding as sh
+
+    axes = sh.data_axis_names(mesh)
+    dp = sh.dp_degree(mesh)
+    entry = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def place(a):
+        if a.ndim <= 1 or entry is None:
+            return jax.device_put(a, sh.replicated(mesh))
+        if a.shape[1] % dp:
+            raise ValueError(
+                f"serving on a data-parallel mesh needs max_slots divisible "
+                f"by the DP degree {dp}; got a cache slot axis of "
+                f"{a.shape[1]} (shape {a.shape})"
+            )
+        return jax.device_put(a, NamedSharding(mesh, PS(None, entry)))
+
+    return jax.tree.map(place, caches)
+
+
 def park_positions(pos, active):
     """Decode positions with inactive slots parked at -1.
 

@@ -82,22 +82,35 @@ class ServeEngine:
     """Continuous-batching engine. See module docstring for the design."""
 
     def __init__(self, cfg, rcfg, params, *, max_slots: int, max_len: int,
-                 decode_block: int = 8, plan=None, n_kv_eff: int | None = None):
+                 decode_block: int = 8, plan=None, n_kv_eff: int | None = None,
+                 mesh=None):
         if cfg.embed_inputs:
             raise NotImplementedError(
                 "serving needs a token frontend; embed-input archs "
                 "(musicgen) are train/score only")
         if cfg.n_codebooks:
             raise NotImplementedError("multi-codebook decode is not served")
-        self.cfg, self.rcfg, self.params = cfg, rcfg, params
+        self.cfg, self.rcfg = cfg, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.decode_block = decode_block
         self.plan = plan if plan is not None else (rcfg.compression or None)
+        self.mesh = mesh
 
         # n_kv_eff: KV heads replicated for TP divisibility — the slot
         # caches must match the params' KV dim or write_slot's splice fails
         self.caches = init_caches(cfg, rcfg, max_slots, max_len,
                                   n_kv_eff=n_kv_eff)
+        if mesh is not None:
+            # Data-parallel decode: params replicated, the slot axis of the
+            # batched cache sharded over the data axes. The jitted decode
+            # loop then partitions every per-slot tensor the same way and
+            # tokens come out identical to the single-device engine
+            # (tests/test_multidevice.py holds it to that).
+            from repro.runtime import sharding as rt_sh
+
+            params = jax.device_put(params, rt_sh.replicated(mesh))
+            self.caches = cache_lib.shard_slots(self.caches, mesh)
+        self.params = params
         B = max_slots
         self.slot_uid = np.full((B,), -1, np.int64)
         self.tok = np.zeros((B,), np.int32)

@@ -1,10 +1,24 @@
-from repro.train.train_step import TrainState, make_train_step, init_train_state
+from repro.train.train_step import (
+    TrainState,
+    make_train_step,
+    init_train_state,
+    loss_and_grad,
+)
+from repro.train.distributed import (
+    init_distributed_state,
+    make_shard_map_train_step,
+    state_shardings,
+)
 from repro.train.serve_step import make_decode_step, make_prefill
 
 __all__ = [
     "TrainState",
     "make_train_step",
     "init_train_state",
+    "loss_and_grad",
+    "init_distributed_state",
+    "make_shard_map_train_step",
+    "state_shardings",
     "make_decode_step",
     "make_prefill",
 ]
