@@ -9,6 +9,12 @@ the engine actually does), and *async* is the seed loop verbatim
 observable per step). The acceptance ratio — fused >= 3x — is against
 the streaming loop; the async ratio is reported alongside. Token
 streams of all paths are asserted identical before any timing.
+
+``run_paged_mixed`` (registered as ``serving_paged_mixed``) is the paged
+KV-cache acceptance workload: a mixed-prompt-length request set against a
+FIXED KV pool budget, comparing max admissible concurrency and reserved
+cache bytes between ``cache_layout=dense`` (whole max_len slabs) and
+``paged`` (block tables). Token parity paged == dense is asserted first.
 """
 from __future__ import annotations
 
@@ -147,5 +153,81 @@ def run(budget: str = "small"):
          f"{st['p50_token_latency_ms']:.2f}/{st['p95_token_latency_ms']:.2f} ms")
 
 
+def run_paged_mixed(budget: str = "small"):
+    """Mixed-length workload at a fixed KV pool size: how many requests
+    can each cache layout actually keep in flight, and what does it
+    reserve to do so?
+
+    The dense engine must carve the budget into whole ``max_len`` slabs,
+    so its concurrency is ``pool_tokens // max_len`` regardless of the
+    actual prompt mix. The paged engine reserves
+    ``ceil((prompt + gen) / page_size)`` pages per request, so short
+    requests stop paying for long ones. Acceptance: >= 2x admissible
+    concurrency (equivalently >= 2x lower reserved bytes per in-flight
+    request) on the skewed-short mix below.
+    """
+    arch = "internlm2-1.8b_smoke" if budget == "small" else "llama-60m"
+    if budget == "small":
+        lengths = [8, 8, 12, 16, 16, 24, 8, 32, 48, 12, 64, 96,
+                   8, 16, 24, 8, 12, 32, 16, 8]
+        gen, page, max_len, pool_tokens, paged_slots = 12, 16, 128, 512, 12
+    else:
+        lengths = [32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024,
+                   1536, 2048, 64, 128, 256, 32, 96, 512, 48]
+        gen, page, max_len, pool_tokens, paged_slots = 64, 64, 2176, 8704, 16
+    cfg = get_config(arch)
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).tolist()
+               for l in lengths]
+    mk = lambda: [Request(uid=i, tokens=prompts[i], max_new_tokens=gen)
+                  for i in range(len(prompts))]
+
+    # dense at the same budget: whole max_len slabs, so the pool fits
+    # exactly pool_tokens // max_len of them
+    dense_slots = max(1, pool_tokens // max_len)
+    eng_d = ServeEngine(cfg, rcfg, params, max_slots=dense_slots,
+                        max_len=max_len, decode_block=8)
+    out_d = eng_d.run(mk())
+
+    eng_p = ServeEngine(cfg, rcfg, params, max_slots=paged_slots,
+                        max_len=max_len, decode_block=8,
+                        cache_layout="paged", page_size=page,
+                        pool_tokens=pool_tokens)
+    out_p = eng_p.run(mk())
+    for i in range(len(prompts)):
+        assert out_p[i].tokens == out_d[i].tokens, \
+            f"paged diverged from dense on request {i}"
+
+    st_d, st_p = eng_d.stats(), eng_p.stats()
+    conc_d, conc_p = st_d["peak_active"], st_p["peak_active"]
+    res_d, res_p = (st_d["peak_kv_reserved_bytes"],
+                    st_p["peak_kv_reserved_bytes"])
+    per_req_d = res_d / max(1, conc_d)
+    per_req_p = res_p / max(1, conc_p)
+    emit("serving_paged_mixed_concurrency_dense", conc_d,
+         f"pool={pool_tokens}tok max_len={max_len}")
+    emit("serving_paged_mixed_concurrency_paged", conc_p,
+         f"pool={pool_tokens}tok page={page}")
+    emit("serving_paged_mixed_concurrency_ratio", conc_p / max(1, conc_d),
+         "acceptance: >= 2x admissible concurrent requests")
+    emit("serving_paged_mixed_reserved_mb_dense", res_d / 1e6,
+         f"per_inflight_req_mb={per_req_d / 1e6:.3f}")
+    emit("serving_paged_mixed_reserved_mb_paged", res_p / 1e6,
+         f"per_inflight_req_mb={per_req_p / 1e6:.3f}")
+    emit("serving_paged_mixed_reserved_per_req_ratio",
+         per_req_d / max(1.0, per_req_p),
+         "dense/paged reserved bytes per in-flight request")
+    note(f"[serving-paged] {arch} {len(prompts)} reqs "
+         f"lens {min(lengths)}-{max(lengths)} gen={gen} "
+         f"pool={pool_tokens} tok: concurrency {conc_p} paged vs {conc_d} "
+         f"dense ({conc_p / max(1, conc_d):.1f}x); reserved/req "
+         f"{per_req_p / 1e6:.3f} vs {per_req_d / 1e6:.3f} MB "
+         f"({per_req_d / max(1.0, per_req_p):.1f}x); tokens identical")
+
+
 if __name__ == "__main__":
     run()
+    run_paged_mixed()

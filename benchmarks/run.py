@@ -21,6 +21,7 @@ HARNESSES = [
     ("appH_l2_error_coverage", "benchmarks.bench_l2_error"),
     ("appJ_complexity", "benchmarks.bench_complexity"),
     ("serving_engine", "benchmarks.bench_serving"),
+    ("serving_paged_mixed", "benchmarks.bench_serving:run_paged_mixed"),
     ("multidevice_scaling", "benchmarks.bench_scaling"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]
@@ -41,7 +42,10 @@ def main() -> None:
         print(f"# === {name} ===", flush=True)
         t0 = time.monotonic()
         try:
-            importlib.import_module(module).run(budget=args.budget)
+            # "pkg.mod" runs mod.run; "pkg.mod:fn" runs mod.fn
+            mod_name, _, fn_name = module.partition(":")
+            fn = getattr(importlib.import_module(mod_name), fn_name or "run")
+            fn(budget=args.budget)
         except Exception as e:  # keep the suite running; report at the end
             failures += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)

@@ -194,6 +194,15 @@ class RunConfig:
                                      # (0 = off). Odd vocabs (49155, 50280)
                                      # otherwise force a REPLICATED lm head —
                                      # the §Perf granite fix.
+    cache_layout: str = "dense"      # serving decode-cache layout: dense
+                                     # (slot-contiguous (B, max_len, ...)
+                                     # slabs) | paged (global page pools +
+                                     # per-slot block tables, serve/paging
+                                     # — cache bytes track actual tokens)
+    kv_page_size: int = 64           # tokens per KV page (paged layout);
+                                     # also the paged decode kernel's kv
+                                     # tile, so keep it >= the dtype's
+                                     # sublane granule on real TPUs
     grad_accum: int = 1              # microbatch accumulation steps
     pad_experts_multiple: int = 0    # pad MoE expert axis (granite 40 -> 48)
     moe_gather_dispatch: bool = True # gather-based EP dispatch (vs value scatter)

@@ -18,6 +18,7 @@ __all__ = [
     "ActivationReport",
     "qkv_activation_bytes",
     "site_telemetry_metrics",
+    "serving_cache_metrics",
     "plan_activation_report",
 ]
 
@@ -92,6 +93,28 @@ def site_telemetry_metrics(tele: dict) -> dict:
         out[f"site/{path}/kept_frac"] = v[1] / jnp.maximum(v[2], 1.0)
         out[f"site/{path}/beta"] = v[3] / jnp.maximum(v[4], 1.0)
     return out
+
+
+def serving_cache_metrics(*, reserved_bytes: int, used_bytes: int,
+                          capacity_bytes: int, pages_total: int = 0,
+                          pages_free: int = 0) -> dict:
+    """Reserved-vs-used KV-cache telemetry for the serving engine.
+
+    ``reserved`` is what admission has committed (dense: whole slabs of
+    every occupied slot; paged: pages handed out), ``used`` is tokens
+    actually written, ``capacity`` is the allocated backing store. The
+    reserved/used gap is the overcommit a paged layout reclaims — these
+    metrics make the paged win observable per step instead of inferred.
+    """
+    mb = 1024.0 * 1024.0
+    return {
+        "cache/kv_capacity_mb": capacity_bytes / mb,
+        "cache/kv_reserved_mb": reserved_bytes / mb,
+        "cache/kv_used_mb": used_bytes / mb,
+        "cache/kv_utilization": used_bytes / max(1, reserved_bytes),
+        "cache/kv_pages_total": float(pages_total),
+        "cache/kv_pages_free": float(pages_free),
+    }
 
 
 def plan_activation_report(resolved, *, batch: int, seq: int,

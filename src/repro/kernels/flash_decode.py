@@ -15,6 +15,17 @@ models/attention.py previously built (B, KV, G, 1, S) scores per step.
 
 Oracle: :func:`flash_decode_ref` (also the CPU serving path — interpret
 mode is far too slow per decode step for a per-token inner loop).
+
+Paged variant (:func:`flash_paged_decode`): the KV cache lives in a global
+page pool ``(n_pages, page_size, KV, dh)`` and each sequence owns a
+*block table* — logical kv block ``j`` of sequence ``b`` is physical page
+``block_table[b, j]`` (-1 = unmapped). The Pallas kernel gathers its kv
+tiles *through* the table: the block table is a scalar-prefetch operand,
+so the k/v BlockSpec index maps read the physical page id per grid step,
+and a tile whose table entry is -1 is skipped entirely (page-granular
+tile liveness; masking inside a live page still comes from ``page_pos``,
+the paged counterpart of ``slot_pos``). The jnp oracle gathers the pool
+through the same table and defers to :func:`flash_decode_ref`.
 """
 from __future__ import annotations
 
@@ -149,6 +160,167 @@ def flash_decode_ref(q, k, v, q_pos, slot_pos, *, causal: bool = True,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def _paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ppos_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, nb: int, kv: int,
+                         causal: bool, window: int, scale: float):
+    bh = pl.program_id(0)
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Tile liveness is page-granular: an unmapped block-table entry means
+    # the whole kv tile is dead, so its loads/FLOPs are skipped — the
+    # index map already clamped the page id, making the (ignored) block
+    # fetch safe.
+    page = bt_ref[bh // kv, jk]
+
+    @pl.when(page >= 0)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)       # (G, dhp)
+        k = k_ref[0, 0].astype(jnp.float32)    # (psp, dhp)
+        v = v_ref[0, 0].astype(jnp.float32)    # (psp, dhp)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                               # (G, psp)
+
+        qpos = qpos_ref[0, 0]
+        spos = ppos_ref[...]                    # (1, psp) absolute positions
+        mask = spos >= 0
+        if causal:
+            mask = mask & (spos <= qpos)
+        if window > 0:
+            mask = mask & (qpos - spos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(jk == nb - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
+                              page_pos, *, causal: bool = True,
+                              window: int = 0, interpret: bool = True):
+    """q: (B, 1, H, dh); k_pages, v_pages: (n_pages, page_size, KV, dh);
+    q_pos: (B,) int32 absolute; block_table: (B, nb) int32 physical page
+    per logical block (-1 = unmapped); page_pos: (n_pages, page_size)
+    int32 absolute-position-per-slot (-1 = empty). Returns (B, 1, H, dh).
+
+    The kv tile size IS the page size, so pick page_size >= the dtype's
+    sublane granule (8 for f32, 16 for bf16) on real TPUs; smaller pages
+    are padded (pad rows masked via page_pos = -1).
+    """
+    B, Lq, H, dh = q.shape
+    assert Lq == 1, "flash_paged_decode is the single-query path"
+    n_pages, ps, KV, _ = k_pages.shape
+    nb = block_table.shape[1]
+    G = H // KV
+    scale = dh ** -0.5
+    pdh = (-dh) % 128
+    pps = (-ps) % 8
+    dhp, psp = dh + pdh, ps + pps
+
+    qr = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pdh)))
+    qr = qr.reshape(B, KV, G, dhp).reshape(B * KV, G, dhp)
+    # kv head becomes the leading (grid-indexed) dim; page stays a whole
+    # block so the index map can pick it straight off the block table.
+    kt = jnp.pad(k_pages, ((0, 0), (0, pps), (0, 0), (0, pdh))
+                 ).transpose(2, 0, 1, 3)        # (KV, n_pages, psp, dhp)
+    vt = jnp.pad(v_pages, ((0, 0), (0, pps), (0, 0), (0, pdh))
+                 ).transpose(2, 0, 1, 3)
+    pposr = jnp.pad(page_pos, ((0, 0), (0, pps)), constant_values=-1)
+    qposr = q_pos.reshape(B, 1).astype(jnp.int32)
+    bt = block_table.astype(jnp.int32)
+
+    def page_of(bh, jk, bt_ref):
+        return jnp.maximum(bt_ref[bh // KV, jk], 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, nb=nb, kv=KV, causal=causal,
+                          window=window, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * KV, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda bh, jk, bt_ref: (bh // KV, 0)),
+                pl.BlockSpec((1, G, dhp), lambda bh, jk, bt_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, 1, psp, dhp),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, 1, psp, dhp),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, psp),
+                             lambda bh, jk, bt_ref:
+                             (page_of(bh, jk, bt_ref), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, dhp),
+                                   lambda bh, jk, bt_ref: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dhp), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, dhp), q.dtype),
+        interpret=interpret,
+    )(bt, qposr, qr, kt, vt, pposr)
+    return out.reshape(B, KV, G, dhp)[..., :dh].reshape(B, 1, H, dh)
+
+
+def flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table, page_pos,
+                           *, causal: bool = True, window: int = 0):
+    """Pure-jnp oracle / CPU serving path: gather the pool through the
+    block table, then defer to :func:`flash_decode_ref`. Unmapped blocks
+    gather page 0 (which may belong to another sequence) and are masked
+    wholesale by forcing their positions to -1."""
+    B = q.shape[0]
+    n_pages, ps, KV, dh = k_pages.shape
+    nb = block_table.shape[1]
+    btc = jnp.maximum(block_table, 0)
+    k = k_pages[btc].reshape(B, nb * ps, KV, dh)
+    v = v_pages[btc].reshape(B, nb * ps, KV, dh)
+    spos = jnp.where(block_table[..., None] >= 0, page_pos[btc], -1)
+    return flash_decode_ref(q, k, v, q_pos, spos.reshape(B, nb * ps),
+                            causal=causal, window=window)
+
+
+def flash_paged_decode(q, k_pages, v_pages, q_pos, block_table, page_pos, *,
+                       causal: bool = True, window: int = 0,
+                       use_pallas: bool | None = None):
+    """Dispatch: Pallas paged kernel on TPU, jnp gather+reference elsewhere.
+
+    Row-independence over the batch dim holds exactly as in the dense
+    path — pages are exclusively owned by one sequence, so the serving
+    parity invariant (batched == solo tokens) carries over.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_paged_decode_kernel(
+            q, k_pages, v_pages, q_pos, block_table, page_pos, causal=causal,
+            window=window, interpret=jax.default_backend() != "tpu")
+    return flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table,
+                                  page_pos, causal=causal, window=window)
 
 
 def flash_decode(q, k, v, q_pos, slot_pos, *, causal: bool = True,

@@ -18,10 +18,14 @@ from repro.kernels.flash_attention import (  # re-export
     flash_attention,
     flash_attention_fwd,
 )
-from repro.kernels.flash_decode import flash_decode  # re-export
+from repro.kernels.flash_decode import (  # re-export
+    flash_decode,
+    flash_paged_decode,
+)
 
 __all__ = ["pamm_compress", "pamm_apply", "flash_attention",
-           "flash_attention_fwd", "flash_decode", "on_tpu"]
+           "flash_attention_fwd", "flash_decode", "flash_paged_decode",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:

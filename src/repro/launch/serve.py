@@ -44,7 +44,10 @@ def _build_requests(cfg, args) -> list[Request]:
 def _serve_once(cfg, rcfg, params, args):
     engine = ServeEngine(cfg, rcfg, params, max_slots=args.batch,
                          max_len=args.prompt_len + args.gen + 1,
-                         decode_block=args.decode_block)
+                         decode_block=args.decode_block,
+                         cache_layout=args.cache_layout,
+                         page_size=args.page_size,
+                         pool_tokens=args.pool_tokens or None)
     results = engine.run(_build_requests(cfg, args))
     return results, engine.stats()
 
@@ -59,6 +62,15 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--decode-block", type=int, default=8,
                     help="decode tokens per fused lax.scan call")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="decode KV cache: dense per-slot slabs, or paged "
+                         "pools + block tables (DESIGN.md §9)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--pool-tokens", type=int, default=0,
+                    help="KV pool budget in tokens per pool "
+                         "(0 = dense-equivalent worst case)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--compression", default="",
@@ -90,6 +102,12 @@ def main(argv=None):
           f"p50 {stats['p50_token_latency_ms']:.2f} ms | "
           f"p95 {stats['p95_token_latency_ms']:.2f} ms | "
           f"cache {stats['cache_slot_bytes'] / 1e6:.2f} MB/slot")
+    print(f"[{args.cache_layout}] kv capacity "
+          f"{stats['cache/kv_capacity_mb']:.2f} MB | peak reserved "
+          f"{stats['peak_kv_reserved_bytes'] / 2**20:.2f} MB | peak used "
+          f"{stats['peak_kv_used_bytes'] / 2**20:.2f} MB | "
+          f"peak concurrency {stats['peak_active']} | "
+          f"{stats['prefill_compiles']} prefill compiles")
 
     if args.smoke:
         again, stats2 = _serve_once(cfg, rcfg, params, args)

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import SiteCtx, exact_ctx
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_paged_decode
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
 from repro.runtime.sharding import maybe_constrain
 
@@ -206,6 +206,82 @@ def cache_insert(cache: KVCache, k_new, v_new, positions) -> KVCache:
     )
 
 
+class PagedKVCache(NamedTuple):
+    """Paged decode cache: one global page pool per layer plus per-sequence
+    block tables, so cache residency tracks *actual* tokens instead of a
+    dense ``(B, max_len, ...)`` worst-case slab (DESIGN.md §9).
+
+    Logical layout per sequence is identical to :class:`KVCache` — absolute
+    positions, ring wrap for sliding-window layers — but logical kv block
+    ``j`` of sequence ``b`` lives in physical page ``block_table[b, j]``.
+    Page ownership is exclusive (the host allocator hands a page to one
+    sequence at a time), which preserves the row-independence that makes
+    batched decode token-identical to solo decode.
+    """
+
+    k_pages: jax.Array     # (n_pages, page_size, KV, dh)
+    v_pages: jax.Array     # (n_pages, page_size, KV, dh)
+    page_pos: jax.Array    # (n_pages, page_size) int32 absolute pos; -1 = empty
+    block_table: jax.Array  # (B, nb) int32 physical page id; -1 = unmapped
+    ring: jax.Array        # () bool-as-int32: 1 => ring of logical size nb*page_size
+
+
+def init_paged_kv_cache(B: int, logical: int, page_size: int, n_pages: int,
+                        kv: int, dh: int, dtype, ring: bool) -> PagedKVCache:
+    """``logical`` (the per-sequence logical cache size, i.e. the dense S
+    rounded up to a page multiple) must divide into whole pages."""
+    assert logical % page_size == 0, (logical, page_size)
+    return PagedKVCache(
+        k_pages=jnp.zeros((n_pages, page_size, kv, dh), dtype),
+        v_pages=jnp.zeros((n_pages, page_size, kv, dh), dtype),
+        page_pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        block_table=jnp.full((B, logical // page_size), -1, jnp.int32),
+        ring=jnp.array(1 if ring else 0, jnp.int32),
+    )
+
+
+def paged_addresses(positions, block_table, ring, page_size: int, nb: int):
+    """(page, offset) for absolute ``positions`` through ``block_table``.
+
+    positions: (B, L) int32 (-1 = invalid); block_table: (B, nb).
+    Invalid positions and unmapped blocks return page == n_pages-agnostic
+    sentinel -1 (callers map it out-of-bounds for ``mode="drop"`` scatters).
+    Ring caches wrap at the logical size nb*page_size, exactly like the
+    dense ring's ``positions % S``.
+    """
+    logical = nb * page_size
+    safe = jnp.maximum(positions, 0)
+    idx = jnp.where(ring > 0, safe % logical, safe)
+    # non-ring positions beyond the logical size are invalid (the dense
+    # cache drops them as out-of-bounds; so do we)
+    valid = (positions >= 0) & ((ring > 0) | (positions < logical))
+    blk = jnp.minimum(idx // page_size, nb - 1)  # clamp the gather; masked
+    off = idx % page_size
+    page = jnp.take_along_axis(block_table, blk, axis=1)
+    page = jnp.where(valid & (page >= 0), page, -1)
+    return page, off
+
+
+def paged_insert(cache: PagedKVCache, k_new, v_new, positions) -> PagedKVCache:
+    """Insert one decode step's K/V rows (B, 1, KV, dh) at ``positions``
+    (B, 1) through the block table. Invalid positions / unmapped blocks
+    are dropped — the paged counterpart of ``cache_insert``'s parked-slot
+    trick."""
+    n_pages, ps = cache.k_pages.shape[:2]
+    nb = cache.block_table.shape[1]
+    page, off = paged_addresses(positions, cache.block_table, cache.ring,
+                                ps, nb)
+    page = jnp.where(page >= 0, page, n_pages)  # invalid -> OOB (mode=drop)
+    p1, o1 = page[:, 0], off[:, 0]
+    return cache._replace(
+        k_pages=cache.k_pages.at[p1, o1].set(
+            k_new[:, 0].astype(cache.k_pages.dtype), mode="drop"),
+        v_pages=cache.v_pages.at[p1, o1].set(
+            v_new[:, 0].astype(cache.v_pages.dtype), mode="drop"),
+        page_pos=cache.page_pos.at[p1, o1].set(positions[:, 0], mode="drop"),
+    )
+
+
 # ---------------------------------------------------------------------------
 # block-level entry points
 # ---------------------------------------------------------------------------
@@ -249,23 +325,34 @@ def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
     return out @ params["wo"].astype(x.dtype), (k, v)
 
 
-def attn_decode(params, x, positions, cache: KVCache, cfg, *, window: int,
+def attn_decode(params, x, positions, cache, cfg, *, window: int,
                 kernel: bool = False):
     """One-step decode: x (B, 1, d), positions (B, 1) absolute.
 
     Attention runs through the single-query flash path (kernels/
     flash_decode.py): Pallas online-softmax over kv tiles when ``kernel``,
     else its jnp oracle — either way without the (B, KV, G, 1, S) score
-    tensor the chunk=1 sdpa used to materialize.
+    tensor the chunk=1 sdpa used to materialize. ``cache`` picks the
+    layout: a :class:`KVCache` reads its dense slot-contiguous slab, a
+    :class:`PagedKVCache` gathers kv tiles through its block table — the
+    math (and the tokens) are identical either way.
     """
     q, k, v = _project_qkv(params, x, x, exact_ctx(), None, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    cache = cache_insert(cache, k, v, positions)
-    out = flash_decode(
-        q, cache.k, cache.v, positions[:, 0], cache.slot_pos,
-        causal=True, window=window, use_pallas=kernel,
-    )
+    if isinstance(cache, PagedKVCache):
+        cache = paged_insert(cache, k, v, positions)
+        out = flash_paged_decode(
+            q, cache.k_pages, cache.v_pages, positions[:, 0],
+            cache.block_table, cache.page_pos,
+            causal=True, window=window, use_pallas=kernel,
+        )
+    else:
+        cache = cache_insert(cache, k, v, positions)
+        out = flash_decode(
+            q, cache.k, cache.v, positions[:, 0], cache.slot_pos,
+            causal=True, window=window, use_pallas=kernel,
+        )
     out = out.reshape(*x.shape[:-1], -1)
     return out @ params["wo"].astype(x.dtype), cache
 

@@ -75,8 +75,16 @@ def init_block(kind: str, cfg, key, dtype, *, n_kv_eff: int | None = None,
 # train / prefill / decode
 # ---------------------------------------------------------------------------
 def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
-                *, want_cache: bool = False, max_len: int = 0):
-    """Returns (x, aux, cache_or_None). ``ctx`` is this block's SiteCtx."""
+                *, want_cache: bool = False, max_len: int = 0,
+                cache_positions=None):
+    """Returns (x, aux, cache_or_None). ``ctx`` is this block's SiteCtx.
+
+    ``cache_positions``: positions used for the prefill KV-cache insert
+    when they differ from the attention positions — a length-bucketed
+    prompt marks its pad rows -1 here so they are dropped instead of
+    written (critical for ring caches, where a pad row would *evict* a
+    real tail token, not just sit masked).
+    """
     cache = None
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
 
@@ -97,7 +105,9 @@ def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
             kvc = attn_lib.init_kv_cache(
                 x.shape[0], size, k_roped.shape[2], k_roped.shape[3], x.dtype, bool(win)
             )
-            cache = attn_lib.cache_insert(kvc, k_roped, v, positions)
+            cache = attn_lib.cache_insert(
+                kvc, k_roped, v,
+                positions if cache_positions is None else cache_positions)
         h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
         if kind == "moe":
             out2, a = moe_lib.moe_ffn(params["ffn"], h2, cfg,
@@ -212,12 +222,33 @@ def block_cache_specs(kind, cfg, *, shard_cache_seq: bool = False):
     raise ValueError(kind)
 
 
-def init_block_cache(kind, cfg, B: int, max_len: int, dtype, *, n_kv_eff=None):
-    """Zero-initialized cache (used by serve_step input_specs and decoding)."""
+def init_block_cache(kind, cfg, B: int, max_len: int, dtype, *, n_kv_eff=None,
+                     layout: str = "dense", page_size: int = 0,
+                     pool_pages: int | None = None):
+    """Zero-initialized cache (used by serve_step input_specs and decoding).
+
+    ``layout="paged"`` builds :class:`attention.PagedKVCache` for the
+    self-attention kinds — a page pool of ``pool_pages`` pages of
+    ``page_size`` tokens (default: the dense worst case, B x blocks/slot)
+    — instead of the dense (B, S, KV, dh) slab. Ring (sliding-window)
+    caches map to a bounded block table: the logical size is the dense
+    ring size rounded up to whole pages, and wrap-around stays modulo
+    arithmetic. Recurrent/SSM/cross-attn caches are O(1) or fixed-size
+    per slot, so they keep their dense layout under either setting.
+    """
     if kind in ("attn", "swa", "latt", "moe"):
         win = _window_for(kind, cfg)
         size = min(max_len, win) if win else max_len
         kv = n_kv_eff or cfg.n_kv_heads
+        if layout == "paged":
+            if page_size < 1:
+                raise ValueError(f"paged cache needs page_size >= 1, got {page_size}")
+            logical = -(-size // page_size) * page_size
+            worst = B * (logical // page_size)
+            n_pages = worst if pool_pages is None else min(pool_pages, worst)
+            return attn_lib.init_paged_kv_cache(
+                B, logical, page_size, max(1, n_pages), kv, cfg.head_dim,
+                dtype, bool(win))
         return attn_lib.init_kv_cache(B, size, kv, cfg.head_dim, dtype, bool(win))
     if kind == "xattn":
         kv = n_kv_eff or cfg.n_kv_heads

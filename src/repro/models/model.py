@@ -280,13 +280,31 @@ def loss_fn(cfg, rcfg, plan, params, batch, key):
 # ---------------------------------------------------------------------------
 # serving: prefill + decode
 # ---------------------------------------------------------------------------
-def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None):
+def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None,
+                layout: str | None = None, page_size: int | None = None,
+                pool_pages: int | None = None):
+    """Decode caches for the whole stack (B = batch slots).
+
+    ``layout``/``page_size`` default from ``rcfg.cache_layout`` /
+    ``rcfg.kv_page_size``: ``dense`` keeps the slot-contiguous
+    (layers, B, S, KV, dh) slabs, ``paged`` builds per-layer page pools
+    plus block tables (models/attention.PagedKVCache) so KV residency is
+    allocated page-by-page at serve time. ``pool_pages`` caps each pool
+    (None = dense-equivalent worst case).
+    """
     cdt, _ = _dtype(rcfg)
+    layout = layout or getattr(rcfg, "cache_layout", "dense")
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"cache_layout must be dense|paged, got {layout!r}")
+    page_size = page_size or getattr(rcfg, "kv_page_size", 64)
     caches = []
     for unit, rep in cfg.stages:
         unit_caches = []
         for kind in unit:
-            one = blk.init_block_cache(kind, cfg, B, max_len, cdt, n_kv_eff=n_kv_eff)
+            one = blk.init_block_cache(kind, cfg, B, max_len, cdt,
+                                       n_kv_eff=n_kv_eff, layout=layout,
+                                       page_size=page_size,
+                                       pool_pages=pool_pages)
             stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None], (rep,) + t.shape), one)
             unit_caches.append(stacked)
         caches.append(unit_caches)
@@ -304,7 +322,8 @@ def cache_logical_specs(cfg, *, shard_cache_seq: bool = False):
     return specs
 
 
-def prefill(cfg, rcfg, params, batch, max_len: int, plan=None):
+def prefill(cfg, rcfg, params, batch, max_len: int, plan=None,
+            prompt_len=None):
     """Run the prompt, build caches sized ``max_len``. Returns (logits, caches).
 
     ``plan``: optional CompressionPlan spec/object routed through the same
@@ -313,12 +332,24 @@ def prefill(cfg, rcfg, params, batch, max_len: int, plan=None):
     serving plan changes no logits — but it exercises plan resolution and
     site dispatch instead of silently bypassing them, and ``None`` keeps
     the zero-overhead exact path.
+
+    ``prompt_len``: optional (B,) int32 of true prompt lengths for
+    length-bucketed batches whose tokens are right-padded. The returned
+    logits row is then taken at position ``prompt_len - 1`` instead of the
+    last row, so the padded tail never picks the first sampled token.
+    (With causal attention, pad rows cannot perturb real rows; the serving
+    cache splice masks their K/V out — serve/cache.mask_pad_rows.)
     """
     cdt, _ = _dtype(rcfg)
     resolved = None if plan is None else plan_lib.as_resolved(plan, cfg, rcfg)
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    # bucketing pad rows must never be WRITTEN to the prefill cache (a
+    # ring cache would evict real tail tokens); -1 makes cache_insert
+    # drop them. Attention/RoPE keep the true arange positions.
+    cpos = None if prompt_len is None else jnp.where(
+        positions < jnp.asarray(prompt_len)[:, None], positions, -1)
     extras = _extras(cfg, batch, cdt)
     aux = jnp.float32(0)
     key = jax.random.key(0)
@@ -336,6 +367,7 @@ def prefill(cfg, rcfg, params, batch, max_len: int, plan=None):
                 x_c, a, cache = blk.block_train(
                     kind, cfg, rcfg, ctx, bparams[bi], x_c, positions, extras,
                     key, a, want_cache=True, max_len=max_len,
+                    cache_positions=cpos,
                 )
                 outs.append(cache)
             return x_c, tuple(outs)
@@ -349,7 +381,11 @@ def prefill(cfg, rcfg, params, batch, max_len: int, plan=None):
             caches.append([jax.tree.map(lambda t: t[None], c) for c in stage_caches])
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x[:, -1:] @ params["head"].astype(cdt)).astype(jnp.float32)
+    if prompt_len is not None:
+        x = x[jnp.arange(B), jnp.asarray(prompt_len) - 1][:, None]
+    else:
+        x = x[:, -1:]
+    logits = (x @ params["head"].astype(cdt)).astype(jnp.float32)
     return logits, caches
 
 

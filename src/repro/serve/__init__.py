@@ -1,7 +1,9 @@
 """Serving subsystem: continuous-batching engine over the Pallas
-attention path (DESIGN.md §9)."""
-from repro.serve.cache import cache_bytes, read_slot, slot_bytes, write_slot
+attention path, dense or paged KV-cache layout (DESIGN.md §9)."""
+from repro.serve.cache import (cache_bytes, mask_pad_rows, read_slot,
+                               slot_bytes, write_slot, write_slot_paged)
 from repro.serve.engine import Request, RequestOutput, ServeEngine
+from repro.serve.paging import PageAllocator, PoolSpec
 from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
 
 __all__ = [
@@ -12,7 +14,11 @@ __all__ = [
     "sample_tokens",
     "request_keys",
     "write_slot",
+    "write_slot_paged",
+    "mask_pad_rows",
     "read_slot",
     "cache_bytes",
     "slot_bytes",
+    "PageAllocator",
+    "PoolSpec",
 ]

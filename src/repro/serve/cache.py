@@ -18,11 +18,22 @@ into the slot. Eviction needs no reset: a freed slot's stale K/V rows are
 unreachable (its decode position is parked at -1, which masks every slot
 in flash_decode and makes cache_insert drop the write), and the next
 admission overwrites the whole slot.
+
+Paged layout: the engine cache's self-attention nodes are
+``PagedKVCache`` pools instead of dense slabs. Prefill still produces a
+dense batch-1 cache; :func:`write_slot_paged` installs the slot's
+block-table row, resets ``page_pos`` on the newly owned pages (they may
+carry a previous owner's stale positions), and scatters the prompt's K/V
+rows page-by-page through the table. Pad rows from prompt-length
+bucketing (position >= the true prompt length) are dropped by both splice
+paths — :func:`mask_pad_rows` for dense, the scatter validity mask here.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.models.attention import KVCache, PagedKVCache, paged_addresses
 
 
 def write_slot(full, one, slot):
@@ -52,6 +63,85 @@ def read_slot(full, slot):
     return jax.tree.map(f, full)
 
 
+def mask_pad_rows(caches, prompt_len):
+    """Invalidate K/V rows at positions >= ``prompt_len`` in a (batch-1)
+    prefill cache tree — the rows a length-bucketed prompt padded in.
+    Their ``slot_pos`` flips to -1, which every decode path already treats
+    as "empty slot", so the splice carries them but nothing can read them.
+    """
+    def f(node):
+        if isinstance(node, KVCache):
+            return node._replace(slot_pos=jnp.where(
+                node.slot_pos < prompt_len, node.slot_pos, -1))
+        return node
+
+    return jax.tree.map(f, caches, is_leaf=lambda n: isinstance(n, KVCache))
+
+
+def _splice_paged(fc: PagedKVCache, oc: KVCache, row, slot, prompt_len):
+    """Install ``row`` as ``slot``'s block table and scatter the batch-1
+    prefill cache ``oc`` into the owned pages. ``fc`` leaves carry the
+    layer-stack dim; the row is shared by every layer of the stack."""
+    nlayers, n_pages, ps = fc.k_pages.shape[:3]
+    nb = fc.block_table.shape[2]
+    bt = fc.block_table.at[:, slot].set(row)
+    # newly owned pages may hold a previous owner's positions: reset so
+    # only rows this splice (or a later decode step) writes are live
+    resetp = jnp.where(row >= 0, row, n_pages)
+    ppos = fc.page_pos.at[:, resetp].set(-1, mode="drop")
+
+    spos = oc.slot_pos[:, 0]                       # (layers, S) absolute
+    spos = jnp.where(spos < prompt_len, spos, -1)  # bucketing pad rows
+    page, off = paged_addresses(
+        spos, jnp.broadcast_to(row[None], (nlayers, nb)), fc.ring[0], ps, nb)
+    page = jnp.where(page >= 0, page, n_pages)     # invalid -> OOB (drop)
+    lidx = jnp.arange(nlayers)[:, None]
+    return fc._replace(
+        k_pages=fc.k_pages.at[lidx, page, off].set(
+            oc.k[:, 0].astype(fc.k_pages.dtype), mode="drop"),
+        v_pages=fc.v_pages.at[lidx, page, off].set(
+            oc.v[:, 0].astype(fc.v_pages.dtype), mode="drop"),
+        page_pos=ppos.at[lidx, page, off].set(spos, mode="drop"),
+        block_table=bt,
+    )
+
+
+def write_slot_paged(full, one, rows, slot, prompt_len):
+    """Splice a batch-1 prefill cache ``one`` into ``slot`` of the paged
+    engine cache ``full``. ``rows`` mirrors the cache tree: a (nb,) int32
+    block-table row per paged node, None elsewhere. Dense nodes (ring
+    flags, recurrent/SSM states, cross-attn image K/V, and any KVCache
+    kept dense) take the ordinary slot splice, with bucketing pad rows
+    masked for KV nodes."""
+    if isinstance(full, PagedKVCache):
+        return _splice_paged(full, one, rows, slot, prompt_len)
+    if isinstance(full, KVCache):
+        return write_slot(full, mask_pad_rows(one, prompt_len), slot)
+    if isinstance(full, list):
+        return [write_slot_paged(f, o, r, slot, prompt_len)
+                for f, o, r in zip(full, one, rows)]
+    return write_slot(full, one, slot)
+
+
+def kv_cache_nodes(caches):
+    """Yield every self-attention KV node (dense KVCache or PagedKVCache)
+    of an engine cache tree, in stage order (engine telemetry/allocators).
+    """
+    for stage in caches:
+        for node in stage:
+            if isinstance(node, (KVCache, PagedKVCache)):
+                yield node
+
+
+def kv_token_bytes(node) -> int:
+    """K+V bytes per cached token across the node's layer stack."""
+    if isinstance(node, PagedKVCache):
+        layers, _, _, kv, dh = node.k_pages.shape
+        return 2 * layers * kv * dh * node.k_pages.dtype.itemsize
+    layers, _, _, kv, dh = node.k.shape
+    return 2 * layers * kv * dh * node.k.dtype.itemsize
+
+
 def cache_bytes(caches) -> int:
     """Total decode-cache footprint in bytes (engine stats)."""
     return sum(
@@ -77,6 +167,11 @@ def shard_slots(caches, mesh):
     from jax.sharding import NamedSharding, PartitionSpec as PS
 
     from repro.runtime import sharding as sh
+
+    if any(isinstance(n, PagedKVCache) for n in kv_cache_nodes(caches)):
+        raise NotImplementedError(
+            "paged caches have no slot axis to shard — serve cache_layout="
+            "'paged' single-host, or use the dense layout on a mesh")
 
     axes = sh.data_axis_names(mesh)
     dp = sh.dp_degree(mesh)

@@ -28,6 +28,26 @@ exact parity matters.
 The scheduler deliberately keeps admission OUT of the fused loop: a scan
 over decode steps never re-enters Python, and the engine only pays the
 (batch-1) prefill + slot-splice when the queue is non-empty.
+
+Cache layouts (``cache_layout=dense|paged``): ``dense`` reserves a
+slot-contiguous ``(layers, B, max_len, KV, dh)`` slab per slot — a short
+prompt pays for ``max_len`` whether it uses it or not. ``paged`` backs
+the self-attention caches with global page pools + per-slot block tables
+(serve/paging.py, models/attention.PagedKVCache): admission reserves
+``ceil((prompt + max_new) / page_size)`` pages per pool, the predicate
+becomes *free slot AND enough free pages in every pool*, and eviction
+returns the pages to the host free list with zero device work (the same
+parked-position trick — no live block table maps a freed page, and
+``page_pos`` resets when the page is re-issued). Both layouts are
+token-identical (tests/test_paging.py pins paged == dense == solo).
+
+Prompt-length bucketing: admission pads prompts up to a power-of-two
+bucket so ``prefill`` compiles once per bucket instead of once per
+distinct prompt length. Pad rows are masked out of the cache splice and
+the first-token logits are read at the true last-prompt position.
+Bucketing auto-disables for archs with sequence-coupled prefill state
+(rec/ssm recurrences, MoE capacity), where extra pad tokens would
+perturb the spliced state.
 """
 from __future__ import annotations
 
@@ -40,8 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stats as stats_lib
 from repro.models import decode_step, init_caches, prefill
+from repro.models.attention import PagedKVCache
 from repro.serve import cache as cache_lib
+from repro.serve import paging
 from repro.serve.sampling import SamplingParams, sample_tokens
 
 PAD_TOKEN = -1
@@ -83,7 +106,9 @@ class ServeEngine:
 
     def __init__(self, cfg, rcfg, params, *, max_slots: int, max_len: int,
                  decode_block: int = 8, plan=None, n_kv_eff: int | None = None,
-                 mesh=None):
+                 mesh=None, cache_layout: str | None = None,
+                 page_size: int | None = None, pool_tokens: int | None = None,
+                 prefill_buckets: bool | None = None):
         if cfg.embed_inputs:
             raise NotImplementedError(
                 "serving needs a token frontend; embed-input archs "
@@ -95,11 +120,59 @@ class ServeEngine:
         self.decode_block = decode_block
         self.plan = plan if plan is not None else (rcfg.compression or None)
         self.mesh = mesh
+        self.cache_layout = cache_layout or getattr(rcfg, "cache_layout",
+                                                    "dense")
+        self.page_size = page_size or getattr(rcfg, "kv_page_size", 64)
+        if mesh is not None and self.cache_layout == "paged":
+            raise NotImplementedError(
+                "paged serving is single-host: the page pool has no slot "
+                "axis to shard — use cache_layout='dense' on a mesh")
+        if pool_tokens is not None and self.cache_layout != "paged":
+            raise ValueError(
+                "pool_tokens budgets the paged layout's page pools; the "
+                "dense layout always reserves max_slots * max_len slabs — "
+                "pass cache_layout='paged' or drop pool_tokens")
+        # pool_tokens: HBM budget per KV pool in tokens (None = the dense
+        # worst case, max_slots * max_len rounded up to pages — same
+        # capability, but reserved bytes still track actual requests)
+        pool_pages = (None if pool_tokens is None
+                      else -(-pool_tokens // self.page_size))
 
         # n_kv_eff: KV heads replicated for TP divisibility — the slot
         # caches must match the params' KV dim or write_slot's splice fails
         self.caches = init_caches(cfg, rcfg, max_slots, max_len,
-                                  n_kv_eff=n_kv_eff)
+                                  n_kv_eff=n_kv_eff,
+                                  layout=self.cache_layout,
+                                  page_size=self.page_size,
+                                  pool_pages=pool_pages)
+        # one host-side allocator per page pool, in cache-tree order (the
+        # same traversal _alloc_rows uses); dense layout has none and
+        # admission degenerates to the free-slot check
+        self.allocators = [
+            paging.PageAllocator(paging.spec_from_cache(
+                node, cache_lib.kv_token_bytes(node)))
+            for node in cache_lib.kv_cache_nodes(self.caches)
+            if isinstance(node, PagedKVCache)
+        ]
+        self._kv_capacity_bytes = 0
+        for node in cache_lib.kv_cache_nodes(self.caches):
+            tb = cache_lib.kv_token_bytes(node)
+            if isinstance(node, PagedKVCache):
+                self._kv_capacity_bytes += node.k_pages.shape[1] * \
+                    node.k_pages.shape[2] * tb
+            else:
+                self._kv_capacity_bytes += node.k.shape[1] * \
+                    node.k.shape[2] * tb
+
+        # prompt-length bucketing: off for archs whose prefill couples
+        # rows/positions beyond causal attention (recurrent state, MoE
+        # expert capacity) — pad tokens there would change the spliced
+        # state, not just dead cache rows
+        kinds = {k for unit, _ in cfg.stages for k in unit}
+        bucketable = not (kinds & {"rec", "ssm", "moe"})
+        self.prefill_buckets = (bucketable if prefill_buckets is None
+                                else prefill_buckets and bucketable)
+        self.bucket_lens: set[int] = set()
         if mesh is not None:
             # Data-parallel decode: params replicated, the slot axis of the
             # batched cache sharded over the data axes. The jitted decode
@@ -138,11 +211,20 @@ class ServeEngine:
         # doesn't grow host memory one float per generated token
         self.latency_samples: collections.deque[float] = collections.deque(
             maxlen=65536)
+        # high-water marks across steps (a drained engine reads 0 reserved,
+        # so peaks are what the paged-vs-dense comparison wants)
+        self.peak_active = 0
+        self.peak_reserved_bytes = 0
+        self.peak_used_bytes = 0
 
         cfg_, rcfg_, max_len_, plan_ = cfg, rcfg, max_len, self.plan
+        # prompt_len rides as a traced operand so one compile covers every
+        # true length inside a bucket (it only moves the logits gather and
+        # the splice's pad mask)
         self._prefill_fn = jax.jit(
-            lambda params, batch: prefill(cfg_, rcfg_, params, batch,
-                                          max_len_, plan_))
+            lambda params, batch, plen: prefill(cfg_, rcfg_, params, batch,
+                                                max_len_, plan_,
+                                                prompt_len=plen))
         self._decode_fns: dict[int, callable] = {}
         # the engine never reuses the pre-call cache value, so on TPU the
         # cache buffers are donated — in-place slot splices and decode
@@ -151,8 +233,13 @@ class ServeEngine:
         from repro.kernels.ops import on_tpu
 
         self._donate = (1,) if on_tpu() else ()
-        self._write_slot = jax.jit(cache_lib.write_slot,
-                                   donate_argnums=(0,) if on_tpu() else ())
+        donate0 = (0,) if on_tpu() else ()
+        self._write_slot = jax.jit(
+            lambda full, one, slot, plen: cache_lib.write_slot(
+                full, cache_lib.mask_pad_rows(one, plen), slot),
+            donate_argnums=donate0)
+        self._write_slot_paged = jax.jit(cache_lib.write_slot_paged,
+                                         donate_argnums=donate0)
         self._sample_first = jax.jit(self._sample_first_impl)
 
     # ------------------------------------------------------------------
@@ -215,6 +302,13 @@ class ServeEngine:
                 f"{req.max_new_tokens} exceeds max_len={self.max_len}")
         if self.cfg.vision_tokens and req.image_embeds is None:
             raise ValueError(f"request {req.uid}: arch needs image_embeds")
+        for alloc in self.allocators:
+            need = alloc.blocks_for(lp + req.max_new_tokens)
+            if need > alloc.spec.n_pages:
+                raise ValueError(
+                    f"request {req.uid}: needs {need} pages but the pool "
+                    f"has {alloc.spec.n_pages} total — raise pool_tokens "
+                    f"or shrink prompt_len + max_new_tokens")
         self.queue.append(req)
 
     @property
@@ -224,21 +318,74 @@ class ServeEngine:
     def _free_slots(self) -> list[int]:
         return [int(i) for i in np.nonzero(~self.active)[0]]
 
+    def _bucket_len(self, lp: int) -> int:
+        """Pad target for a prompt of ``lp`` tokens: the next power of two
+        (>= 16), capped at max_len — a handful of prefill compiles total
+        instead of one per distinct prompt length."""
+        if not self.prefill_buckets:
+            return lp
+        b = 16
+        while b < lp:
+            b <<= 1
+        return min(b, self.max_len)
+
+    def _can_admit(self, req: Request) -> bool:
+        """Paged admission predicate: enough free pages in EVERY pool for
+        the request's full reservation (prompt + worst-case generation —
+        a reserved request can always run to its stop condition; no
+        mid-stream preemption). Dense layout: a free slot is enough."""
+        if not self.allocators:
+            return True
+        total = len(req.tokens) + req.max_new_tokens
+        return all(a.can_allocate(a.blocks_for(total))
+                   for a in self.allocators)
+
+    def _alloc_rows(self, req: Request, slot: int):
+        """Reserve pages in every pool; returns the block-table rows tree
+        (aligned with the cache tree: (nb,) row per paged node, None
+        elsewhere) for write_slot_paged."""
+        total = len(req.tokens) + req.max_new_tokens
+        ai = 0
+        rows = []
+        for stage in self.caches:
+            rstage = []
+            for node in stage:
+                if isinstance(node, PagedKVCache):
+                    alloc = self.allocators[ai]
+                    ai += 1
+                    row = alloc.allocate(slot, alloc.blocks_for(total))
+                    rstage.append(jnp.asarray(row))
+                else:
+                    rstage.append(None)
+            rows.append(rstage)
+        return rows
+
     def _admit(self, req: Request, slot: int) -> Optional[RequestOutput]:
         lp = len(req.tokens)
-        batch = {"tokens": jnp.asarray(np.asarray(req.tokens, np.int32))[None]}
+        lb = self._bucket_len(lp)
+        toks = np.zeros((lb,), np.int32)
+        toks[:lp] = np.asarray(req.tokens, np.int32)
+        batch = {"tokens": jnp.asarray(toks)[None]}
         if self.cfg.vision_tokens:
             batch["image_embeds"] = jnp.asarray(
                 req.image_embeds, jnp.float32)[None]
         t0 = time.perf_counter()
-        logits, pcaches = self._prefill_fn(self.params, batch)
+        logits, pcaches = self._prefill_fn(self.params, batch,
+                                           jnp.asarray([lp], jnp.int32))
+        self.bucket_lens.add(lb)
         tok0 = self._sample_first(
             logits[0, -1, : self.cfg.vocab_size],
             jnp.int32(req.sampling.seed),
             jnp.float32(req.sampling.temperature),
             jnp.int32(req.sampling.top_k),
         )
-        self.caches = self._write_slot(self.caches, pcaches, jnp.int32(slot))
+        if self.allocators:
+            rows = self._alloc_rows(req, slot)
+            self.caches = self._write_slot_paged(
+                self.caches, pcaches, rows, jnp.int32(slot), jnp.int32(lp))
+        else:
+            self.caches = self._write_slot(self.caches, pcaches,
+                                           jnp.int32(slot), jnp.int32(lp))
         tok0 = int(tok0)
         jax.block_until_ready(self.caches)
         dt = time.perf_counter() - t0
@@ -283,6 +430,10 @@ class ServeEngine:
         self.slot_uid[slot] = -1
         self.active[slot] = False
         self.pos[slot] = -1
+        # paged reclamation: pages go back to the free list host-side; the
+        # device cache is untouched (no live block table maps them)
+        for alloc in self.allocators:
+            alloc.release(slot)
         # reset sampling state: a stale temperature > 0 on a free slot
         # would keep defeating sample_tokens' all-greedy lax.cond fast path
         self.temps[slot] = 0.0
@@ -301,9 +452,19 @@ class ServeEngine:
         for slot in self._free_slots():
             if not self.queue:
                 break
+            if not self._can_admit(self.queue[0]):
+                # strict FIFO: when the head can't get pages, later (maybe
+                # smaller) requests wait too — admission order, and hence
+                # every token stream, stays deterministic
+                break
             done = self._admit(self.queue.popleft(), slot)
             if done is not None:
                 finished.append(done)
+
+        self.peak_active = max(self.peak_active, int(self.active.sum()))
+        reserved, used, _, _ = self._cache_usage()
+        self.peak_reserved_bytes = max(self.peak_reserved_bytes, reserved)
+        self.peak_used_bytes = max(self.peak_used_bytes, used)
 
         if not self.active.any():
             return finished
@@ -347,6 +508,12 @@ class ServeEngine:
         prev_active = self.active
         self.active = np.array(active)
 
+        # used peaks AFTER the decode block lands (positions advanced,
+        # slots not yet released) — the admission-time sample above only
+        # covers the prompt tokens
+        _, used, _, _ = self._cache_usage()
+        self.peak_used_bytes = max(self.peak_used_bytes, used)
+
         for b in range(self.max_slots):
             uid = int(self.slot_uid[b])
             if uid < 0:
@@ -381,6 +548,44 @@ class ServeEngine:
         self.decode_tokens = 0
         self.decode_time = 0.0
         self.latency_samples.clear()
+        self.peak_active = 0
+        self.peak_reserved_bytes = 0
+        self.peak_used_bytes = 0
+
+    def _cache_usage(self) -> tuple[int, int, int, int]:
+        """(reserved_bytes, used_bytes, pages_total, pages_free) right now.
+
+        Dense: every occupied slot reserves its whole ``max_len`` slab.
+        Paged: reserved = pages handed out by the allocators. ``used`` is
+        tokens actually written either way, so the utilization gap IS the
+        memory the paged layout gives back.
+        """
+        occupied = np.nonzero(self.slot_uid >= 0)[0]
+        reserved = used = 0
+        pages_total = pages_free = 0
+        if self.allocators:
+            for alloc in self.allocators:
+                pages_total += alloc.spec.n_pages
+                pages_free += alloc.free_pages
+                reserved += alloc.reserved_bytes
+                used += alloc.spec.token_bytes * sum(
+                    alloc.used_tokens(int(self.pos[s])) for s in occupied)
+        else:
+            for node in cache_lib.kv_cache_nodes(self.caches):
+                S = node.k.shape[2]
+                tb = cache_lib.kv_token_bytes(node)
+                reserved += len(occupied) * S * tb
+                used += tb * sum(
+                    min(max(int(self.pos[s]), 0), S) for s in occupied)
+        return reserved, used, pages_total, pages_free
+
+    def cache_telemetry(self) -> dict:
+        """Reserved-vs-used KV telemetry (core.stats.serving_cache_metrics)."""
+        reserved, used, pages_total, pages_free = self._cache_usage()
+        return stats_lib.serving_cache_metrics(
+            reserved_bytes=reserved, used_bytes=used,
+            capacity_bytes=self._kv_capacity_bytes,
+            pages_total=pages_total, pages_free=pages_free)
 
     def stats(self) -> dict:
         lat = sorted(self.latency_samples)
@@ -390,7 +595,7 @@ class ServeEngine:
                 return 0.0
             return lat[min(len(lat) - 1, int(p * len(lat)))]
 
-        return {
+        out = {
             "prefill_tokens": self.prefill_tokens,
             "prefill_s": self.prefill_time,
             "prefill_tok_s": (self.prefill_tokens / self.prefill_time
@@ -402,4 +607,10 @@ class ServeEngine:
             "p50_token_latency_ms": pct(0.50) * 1e3,
             "p95_token_latency_ms": pct(0.95) * 1e3,
             "cache_slot_bytes": cache_lib.slot_bytes(self.caches, self.max_slots),
+            "prefill_compiles": len(self.bucket_lens),
+            "peak_active": self.peak_active,
+            "peak_kv_reserved_bytes": self.peak_reserved_bytes,
+            "peak_kv_used_bytes": self.peak_used_bytes,
         }
+        out.update(self.cache_telemetry())
+        return out

@@ -1,0 +1,173 @@
+"""Host-side page-pool accounting for the paged decode cache (DESIGN §9).
+
+The device side of the paged layout lives in ``models/attention.py``
+(:class:`PagedKVCache`: per-layer page pools + per-slot block tables) and
+``kernels/flash_decode.py`` (block-table gather). This module is the
+*allocator*: plain-numpy free-list bookkeeping the engine consults before
+admission — no jax, no device work, so an admission decision costs
+nothing on the accelerator.
+
+One :class:`PageAllocator` per pool (= per attention cache group in the
+stage tree; all layers of a stacked group share one block table, so one
+allocator covers the whole stack). Pages are owned by exactly one slot at
+a time; eviction returns them to the free list without touching device
+memory — a freed page's stale K/V rows are unreachable because no live
+block table maps them, and ``page_pos`` is reset to -1 when the page is
+handed to its next owner (serve/cache.write_slot_paged).
+
+Reserved vs used: ``reserved`` counts pages handed out (the admission
+currency), ``used`` counts tokens actually written (what a dense layout
+would have needed). The gap between the dense worst case and ``reserved``
+is the paged win; engine.stats() surfaces both via
+core.stats.serving_cache_metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Static shape facts of one page pool (derived from its cache node)."""
+
+    page_size: int        # tokens per page
+    n_pages: int          # physical pages in the pool
+    blocks_per_slot: int  # block-table width nb (logical blocks per slot)
+    ring: bool            # sliding-window ring: logical positions wrap
+    token_bytes: int      # K+V bytes per cached token across the layer stack
+
+    @property
+    def logical_size(self) -> int:
+        """Per-slot logical cache size (the dense S rounded up to pages)."""
+        return self.blocks_per_slot * self.page_size
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_size * self.token_bytes
+
+
+def spec_from_cache(node, token_bytes: int) -> PoolSpec:
+    """PoolSpec for a layer-stacked ``PagedKVCache`` node. ``token_bytes``
+    comes from the caller (serve/cache.kv_token_bytes — one formula for
+    allocator and engine accounting, and this module stays numpy-only)."""
+    return PoolSpec(
+        page_size=node.k_pages.shape[2],
+        n_pages=node.k_pages.shape[1],
+        blocks_per_slot=node.block_table.shape[2],
+        ring=bool(np.asarray(node.ring)[0]),
+        token_bytes=token_bytes,
+    )
+
+
+class PageAllocator:
+    """Free-list allocator over one pool. Host-side only.
+
+    The engine's admission predicate is ``can_allocate(blocks_for(...))``
+    for every pool; ``allocate`` returns the slot's block-table row ready
+    to install on device, ``append`` grows a live slot's table (lazy
+    reservation), ``release`` reclaims on eviction.
+    """
+
+    def __init__(self, spec: PoolSpec):
+        self.spec = spec
+        # LIFO free list: recently freed pages are reused first, which
+        # keeps the working set hot and makes leak bugs loud in tests.
+        self._free: list[int] = list(range(spec.n_pages - 1, -1, -1))
+        self._owned: dict[int, np.ndarray] = {}
+        # lifetime counter: > n_pages proves pages cycle through owners
+        self.total_page_allocations = 0
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_pages(self) -> int:
+        return self.spec.n_pages - len(self._free)
+
+    @property
+    def reserved_bytes(self) -> int:
+        return self.reserved_pages * self.spec.page_bytes
+
+    def used_tokens(self, pos: int) -> int:
+        """Tokens live in this pool for a slot whose next decode position
+        is ``pos`` (= tokens written so far; ring slots cap at the logical
+        size since older entries have been overwritten)."""
+        return min(max(int(pos), 0), self.spec.logical_size)
+
+    def check_invariant(self) -> None:
+        """Every page is free xor owned, exactly once (churn-test hook)."""
+        owned = [int(p) for row in self._owned.values() for p in row if p >= 0]
+        seen = sorted(self._free + owned)
+        if seen != list(range(self.spec.n_pages)):
+            raise AssertionError(
+                f"page pool corrupt: {len(self._free)} free + {len(owned)} "
+                f"owned != {self.spec.n_pages} pages (dups or leaks)")
+
+    # -- sizing --------------------------------------------------------
+    def blocks_for(self, total_tokens: int) -> int:
+        """Blocks a request storing ``total_tokens`` needs (prompt +
+        worst-case generation), capped at the bounded table width — ring
+        pools never need more than the window's worth of pages."""
+        need = -(-total_tokens // self.spec.page_size)
+        return min(need, self.spec.blocks_per_slot)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return len(self._free) >= n_blocks
+
+    # -- mutation ------------------------------------------------------
+    def allocate(self, slot: int, n_blocks: int) -> np.ndarray:
+        """Reserve ``n_blocks`` pages for ``slot``; returns the (nb,)
+        int32 block-table row (-1 padded) to install on device."""
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already owns pages; release first")
+        if n_blocks > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: want {n_blocks} pages, {len(self._free)} free")
+        row = np.full((self.spec.blocks_per_slot,), -1, np.int32)
+        for j in range(n_blocks):
+            row[j] = self._free.pop()
+        self._owned[slot] = row
+        self.total_page_allocations += n_blocks
+        return row
+
+    def owned_row(self, slot: int):
+        """The slot's current block-table row, or None (inspection)."""
+        row = self._owned.get(slot)
+        return None if row is None else row.copy()
+
+    def append(self, slot: int, n_blocks: int = 1) -> np.ndarray:
+        """Grow a live slot's reservation by ``n_blocks`` pages (fills the
+        first unmapped table entries). Returns the updated row.
+
+        NOT on the engine's admission path: ServeEngine reserves the full
+        prompt + max_new worth of pages up front so an admitted request
+        can never stall mid-stream. A lazy-reservation scheduler built on
+        this primitive must gate its own growth on ``can_allocate`` and
+        decide what to do (preempt/swap) when the pool is empty — this
+        method just raises."""
+        row = self._owned[slot]
+        holes = np.nonzero(row < 0)[0]
+        if n_blocks > len(holes):
+            raise RuntimeError(f"slot {slot}: table full, cannot append")
+        if n_blocks > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: want {n_blocks} pages, {len(self._free)} free")
+        for j in holes[:n_blocks]:
+            row[j] = self._free.pop()
+        self.total_page_allocations += n_blocks
+        return row
+
+    def release(self, slot: int) -> int:
+        """Return ``slot``'s pages to the free list (eviction). No device
+        work: the next owner resets page_pos before any read can see the
+        stale rows. Returns the number of pages freed."""
+        row = self._owned.pop(slot, None)
+        if row is None:
+            return 0
+        pages = [int(p) for p in row if p >= 0]
+        self._free.extend(pages)
+        return len(pages)
