@@ -15,6 +15,11 @@ KV-cache acceptance workload: a mixed-prompt-length request set against a
 FIXED KV pool budget, comparing max admissible concurrency and reserved
 cache bytes between ``cache_layout=dense`` (whole max_len slabs) and
 ``paged`` (block tables). Token parity paged == dense is asserted first.
+
+``run_paged_kvquant`` (``serving_kvquant``) repeats that workload with
+compressed pools (``cache.kv=int8|int4|svd``) at the same pool byte
+budget: acceptance is int8 admitting >= 1.8x the fp paged concurrency
+(results persisted to BENCH_serving_kvquant.json by run.py).
 """
 from __future__ import annotations
 
@@ -228,6 +233,75 @@ def run_paged_mixed(budget: str = "small"):
          f"({per_req_d / max(1.0, per_req_p):.1f}x); tokens identical")
 
 
+def run_paged_kvquant(budget: str = "small"):
+    """run_paged_mixed's workload with compressed KV pools at the SAME
+    fixed pool byte budget: ``cache.kv=int8`` stores ~3.2x fewer bytes
+    per token (fp32 smoke dims), so the allocator mints proportionally
+    more pages and admission keeps more requests in flight. Acceptance:
+    >= 1.8x peak concurrency over the fp paged baseline. int4/svd rows
+    are reported alongside (more compression, lossier logits)."""
+    arch = "internlm2-1.8b_smoke" if budget == "small" else "llama-60m"
+    if budget == "small":
+        lengths = [8, 8, 12, 16, 16, 24, 8, 32, 48, 12, 64, 96,
+                   8, 16, 24, 8, 12, 32, 16, 8]
+        gen, page, max_len, pool_tokens, slots = 12, 16, 128, 384, 20
+    else:
+        lengths = [32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024,
+                   1536, 2048, 64, 128, 256, 32, 96, 512, 48]
+        gen, page, max_len, pool_tokens, slots = 64, 64, 2176, 8704, 20
+    cfg = get_config(arch)
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).tolist()
+               for l in lengths]
+    mk = lambda: [Request(uid=i, tokens=prompts[i], max_new_tokens=gen)
+                  for i in range(len(prompts))]
+
+    def paged_engine(spec: str):
+        eng = ServeEngine(cfg, rcfg, params, max_slots=slots,
+                          max_len=max_len, decode_block=8,
+                          cache_layout="paged", page_size=page,
+                          pool_tokens=pool_tokens, cache_compress=spec)
+        out = eng.run(mk())
+        return eng, out
+
+    eng_fp, out_fp = paged_engine("")
+    st_fp = eng_fp.stats()
+    base_conc = max(1, st_fp["peak_active"])
+    emit("serving_kvquant_concurrency_fp", st_fp["peak_active"],
+         f"pool={pool_tokens}tok page={page} (fp32 paged baseline)")
+    ratio_int8 = 0.0
+    for spec in ("int8", "int4", "svd(r=1/4)"):
+        eng, out = paged_engine(spec)
+        st = eng.stats()
+        pools = st["cache_pools"]
+        tb = sum(p["token_bytes"] for p in pools.values())
+        same = sum(out[i].tokens == out_fp[i].tokens
+                   for i in range(len(prompts)))
+        key = spec.split("(")[0]
+        if key == "int8":
+            ratio_int8 = st["peak_active"] / base_conc
+        emit(f"serving_kvquant_concurrency_{key}", st["peak_active"],
+             f"compression_x={st['cache/kv_compression_x']:.2f} "
+             f"bytes_per_token={tb} "
+             f"greedy_match={same}/{len(prompts)}")
+        emit(f"serving_kvquant_concurrency_ratio_{key}",
+             st["peak_active"] / base_conc,
+             "acceptance: int8 >= 1.8x fp paged concurrency at the "
+             "same pool byte budget" if key == "int8" else
+             "reported alongside (lossier formats)")
+        note(f"[serving-kvquant] {arch} cache.kv={spec}: peak "
+             f"concurrency {st['peak_active']} vs {base_conc} fp "
+             f"({st['peak_active'] / base_conc:.1f}x), "
+             f"x{st['cache/kv_compression_x']:.2f} bytes/token, "
+             f"greedy match {same}/{len(prompts)}")
+    assert ratio_int8 >= 1.8, \
+        f"int8 concurrency ratio {ratio_int8:.2f} < 1.8x acceptance"
+
+
 if __name__ == "__main__":
     run()
     run_paged_mixed()
+    run_paged_kvquant()

@@ -1,11 +1,20 @@
 """Shared benchmark utilities. Every harness prints ``name,us_per_call,derived``
-CSV rows (harness contract) plus human-readable notes on stderr."""
+CSV rows (harness contract) plus human-readable notes on stderr; ``emit``
+also records each row so the driver can persist a harness's results as
+``BENCH_<name>.json`` (benchmarks/run.py)."""
 from __future__ import annotations
 
+import json
+import subprocess
 import sys
 import time
+from pathlib import Path
 
 import jax
+
+# rows emitted since the last drain: (metric name, value, derived string).
+# run.py drains this after each harness to build its BENCH_<name>.json.
+_RESULTS: list[tuple[str, float, str]] = []
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,7 +32,47 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _RESULTS.append((name, float(us), derived))
 
 
 def note(msg: str):
     print(msg, file=sys.stderr, flush=True)
+
+
+def drain_results() -> list[tuple[str, float, str]]:
+    """Rows emitted since the last drain (run.py per-harness bookkeeping)."""
+    out = list(_RESULTS)
+    _RESULTS.clear()
+    return out
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=Path(__file__).resolve().parent, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def write_bench_json(bench: str, config: dict,
+                     rows: list[tuple[str, float, str]],
+                     out_dir: Path | None = None) -> Path:
+    """Persist one harness's emitted rows as ``BENCH_<bench>.json``.
+
+    Schema: {"bench", "config", "metrics": {name: {"value", "derived"}},
+    "git_rev"} — value carries each row's us_per_call/derived-ratio number
+    verbatim, so the file is the machine-readable mirror of the CSV rows.
+    """
+    out_dir = out_dir or Path(__file__).resolve().parent.parent
+    path = out_dir / f"BENCH_{bench}.json"
+    doc = {
+        "bench": bench,
+        "config": config,
+        "metrics": {name: {"value": value, "derived": derived}
+                    for name, value, derived in rows},
+        "git_rev": git_rev(),
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return path

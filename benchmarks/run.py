@@ -2,6 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--budget full`` uses the
 larger configurations (slower; CPU container default is small).
+
+Each harness's rows are also persisted as ``BENCH_<name>.json`` in the
+repo root (schema: bench name, config, metrics, git rev — see
+benchmarks/common.write_bench_json), so the perf trajectory lives in
+versioned files instead of only commit messages. ``--no-json`` skips the
+files (e.g. exploratory runs on a dirty tree).
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ HARNESSES = [
     ("appJ_complexity", "benchmarks.bench_complexity"),
     ("serving_engine", "benchmarks.bench_serving"),
     ("serving_paged_mixed", "benchmarks.bench_serving:run_paged_mixed"),
+    ("serving_kvquant", "benchmarks.bench_serving:run_paged_kvquant"),
     ("multidevice_scaling", "benchmarks.bench_scaling"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]
@@ -31,9 +38,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=["small", "full"], default="small")
     ap.add_argument("--only", default=None, help="substring filter on harness name")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<name>.json result files")
     args = ap.parse_args()
 
     import importlib
+
+    from benchmarks import common
 
     failures = 0
     for name, module in HARNESSES:
@@ -41,11 +52,17 @@ def main() -> None:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.monotonic()
+        common.drain_results()
         try:
             # "pkg.mod" runs mod.run; "pkg.mod:fn" runs mod.fn
             mod_name, _, fn_name = module.partition(":")
             fn = getattr(importlib.import_module(mod_name), fn_name or "run")
             fn(budget=args.budget)
+            if not args.no_json:
+                path = common.write_bench_json(
+                    name, {"budget": args.budget, "harness": module},
+                    common.drain_results())
+                print(f"# wrote {path.name}", file=sys.stderr, flush=True)
         except Exception as e:  # keep the suite running; report at the end
             failures += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)

@@ -203,6 +203,11 @@ class RunConfig:
                                      # also the paged decode kernel's kv
                                      # tile, so keep it >= the dtype's
                                      # sublane granule on real TPUs
+    cache_compress: str = ""         # cache-side CompressionPlan spec for
+                                     # the paged KV pools (core/plan.py):
+                                     # "int8" | "int4(group=64)" |
+                                     # "svd(r=1/4)" — or full rule form
+                                     # "cache.kv=int8". Empty = fp pools.
     grad_accum: int = 1              # microbatch accumulation steps
     pad_experts_multiple: int = 0    # pad MoE expert axis (granite 40 -> 48)
     moe_gather_dispatch: bool = True # gather-based EP dispatch (vs value scatter)

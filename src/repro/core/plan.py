@@ -16,6 +16,12 @@ A site is (stage, block kind, projection role). Roles:
   ``rglru.in``       RG-LRU recurrent-branch input projection
   ``lm_head``        final logits projection (chunked cross-entropy)
 
+Cache sites (``cache.kv``) extend the same grammar to the *serving* KV
+cache: ``cache.kv=int8 | int4(group=64) | svd(r=1/4)`` selects the stored
+page format per attention cache group (DESIGN.md §9). Rules carrying a
+cache-only policy never touch training sites, and vice versa; ``none``
+resets either.
+
 Spec grammar (full reference in DESIGN.md §2)::
 
     plan     := rule (';' rule)*
@@ -62,10 +68,14 @@ from repro.core.policies import (
 __all__ = [
     "Site",
     "Rule",
+    "CacheFormat",
+    "CacheSite",
     "CompressionPlan",
     "ResolvedPlan",
     "SiteCtx",
     "enumerate_sites",
+    "enumerate_cache_sites",
+    "cache_plan_from_spec",
     "make_run_plan",
     "plan_spec_from_legacy",
     "resolve_for_run",
@@ -80,6 +90,14 @@ ROLES = (
     "ffn.gate", "ffn.up", "ffn.down",
     "moe.expert", "ssm.in", "rglru.in", "lm_head",
 )
+
+# Cache sites extend the taxonomy beyond training activations: one
+# ``cache.kv`` site per self-attention cache group (stage, kind) selects
+# the *stored format* of that group's decode KV pages. Cross-attention
+# image K/V is fixed-size and stays in the base dtype, and rec/ssm state
+# is O(1) per slot — neither gets a cache site.
+CACHE_ROLES = ("cache.kv",)
+_CACHE_KINDS = ("attn", "swa", "latt", "moe")
 
 _ATTN_FFN = ("attn.qkv", "ffn.gate", "ffn.up", "ffn.down")
 
@@ -159,6 +177,94 @@ def enumerate_sites(cfg) -> list[Site]:
     return sites
 
 
+def enumerate_cache_sites(cfg) -> list[Site]:
+    """One ``cache.kv`` site per self-attention cache group, in the same
+    deterministic stage/kind order as :func:`enumerate_sites`. These match
+    rules through the same glob machinery (``cache.kv``, ``swa/cache.kv``,
+    ``stage0.attn.cache.kv``) but resolve to a :class:`CacheFormat`, not a
+    training CompressionPolicy."""
+    sites: list[Site] = []
+    for si, (unit, rep) in enumerate(cfg.stages):
+        for kind in dict.fromkeys(unit):
+            if kind not in _CACHE_KINDS:
+                continue
+            mult = rep * sum(1 for k in unit if k == kind)
+            sites.append(Site(si, kind, "cache.kv", 0, mult))
+    return sites
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheFormat:
+    """Stored format of one attention group's decode KV cache.
+
+    ``kind``: ``none`` (base dtype), ``int8`` / ``int4`` (absmax-scaled
+    integer pages, fp32 scales per ``group``-wide slice of head_dim;
+    group 0 = one scale per token per kv head), or ``svd`` (rank-r
+    factored pages, r = round(rank * head_dim), KQ-SVD idiom).
+    """
+
+    kind: str = "none"
+    group: int = 0      # quant scale-group width along head_dim (0 = dh)
+    rank: float = 0.25  # svd rank as a fraction of head_dim
+
+    def __post_init__(self):
+        if self.kind not in ("none", "int8", "int4", "svd"):
+            raise ValueError(f"cache format kind must be none|int8|int4|svd, "
+                             f"got {self.kind!r}")
+        if self.group:
+            if self.group < 1 or self.group & (self.group - 1):
+                # the fused-dequant kernel reshapes the padded (lane-aligned)
+                # kv tile into scale groups, so the group width must divide
+                # the 128-lane padding too — powers of two do by construction
+                raise ValueError(
+                    f"quant scale group must be a power of two, got {self.group}")
+        if self.kind == "svd" and not 0.0 < self.rank <= 1.0:
+            raise ValueError(f"svd rank fraction must be in (0, 1], got {self.rank}")
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.kind != "none"
+
+    def n_groups(self, dh: int) -> int:
+        """Scale groups per head row (quant kinds)."""
+        g = min(self.group or dh, dh)
+        if dh % g:
+            raise ValueError(f"scale group {g} must divide head_dim {dh}")
+        return dh // g
+
+    def svd_rank(self, dh: int) -> int:
+        return max(1, round(self.rank * dh))
+
+    def token_bytes(self, kv: int, dh: int, base_itemsize: int) -> int:
+        """K+V bytes per cached token for ONE layer (scales included)."""
+        if self.kind == "int8":
+            return 2 * kv * (dh + 4 * self.n_groups(dh))
+        if self.kind == "int4":
+            if dh % 2:
+                raise ValueError(f"int4 packing needs an even head_dim, got {dh}")
+            return 2 * kv * (dh // 2 + 4 * self.n_groups(dh))
+        if self.kind == "svd":
+            return 2 * kv * self.svd_rank(dh) * base_itemsize
+        return 2 * kv * dh * base_itemsize
+
+    def __str__(self) -> str:
+        if self.kind in ("int8", "int4") and self.group:
+            return f"{self.kind}(group={self.group})"
+        if self.kind == "svd":
+            return f"svd(r={self.rank:g})"
+        return self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSite:
+    """A resolved cache site: which attention group, stored how."""
+
+    path: str
+    stage: int
+    kind: str
+    fmt: CacheFormat
+
+
 # ---------------------------------------------------------------------------
 # spec parsing
 # ---------------------------------------------------------------------------
@@ -171,13 +277,23 @@ class Rule:
 
 _POLICY_RE = re.compile(r"^\s*([\w.]+)\s*(?:\((.*)\))?\s*$", re.S)
 
-_POLICY_ALIASES = {"exact": "none", "crs": "uniform_crs"}
+_POLICY_ALIASES = {"exact": "none", "crs": "uniform_crs",
+                   "fp16": "none", "bf16": "none", "fp32": "none"}
 _POLICY_ARGS = {
     "pamm": {"r", "eps", "blocks", "k_max", "backend"},
     "uniform_crs": {"r"},
     "compact": {"r"},
     "none": set(),
+    # cache-side policies (cache.kv sites only): stored-page formats
+    "int8": {"group"},
+    "int4": {"group"},
+    "svd": {"r"},
 }
+# Policies that only make sense as a stored cache format. A rule carrying
+# one applies exclusively to cache sites (so ``*=int8`` cannot silently
+# turn training matmuls into no-ops); ``none`` is shared by both vocabularies
+# and resets whichever site type its pattern matches.
+_CACHE_ONLY = {"int8", "int4", "svd"}
 
 
 def _parse_value(s: str):
@@ -236,7 +352,28 @@ def _parse_rule(text: str) -> Rule:
                     f"(allowed: {sorted(_POLICY_ARGS[name])})"
                 )
             args.append((k, _parse_value(v)))
+    if name in _CACHE_ONLY and not _pattern_can_match_cache(pattern):
+        raise ValueError(
+            f"plan rule {text!r}: unknown policy {m.group(1)!r} for "
+            f"training sites — {name} is a cache-only stored format; "
+            "target a cache site (e.g. 'cache.kv=" + name + "')"
+        )
     return Rule(pattern, name, tuple(args))
+
+
+def _pattern_can_match_cache(pattern: str) -> bool:
+    """Whether a rule pattern could select any ``cache.kv`` site on some
+    architecture (cache-only policies on training-only patterns are a
+    spec error, caught at parse time — see Site.matches for candidates)."""
+    for role in CACHE_ROLES:
+        cands = [role]
+        for kind in _CACHE_KINDS:
+            cands.append(f"{kind}/{role}")
+            cands.extend(f"stage{i}/{kind}/{role}" for i in range(64))
+            cands.extend(f"stage{i}.{kind}.{role}" for i in range(64))
+        if any(fnmatchcase(c, pattern) for c in cands):
+            return True
+    return False
 
 
 _KINDS = ("attn", "swa", "moe", "latt", "xattn", "rec", "ssm", "head")
@@ -249,7 +386,7 @@ def _pattern_plausible(pattern: str) -> bool:
     (stage- or path-scoped patterns are arch-specific by construction, so
     a miss there is reported). Used to tell cross-arch rules from typos.
     """
-    for r in ROLES:
+    for r in ROLES + CACHE_ROLES:
         if fnmatchcase(r, pattern):
             return True
         for k in _KINDS:
@@ -299,6 +436,17 @@ def _build_policy(rule: Rule, mesh) -> CompressionPolicy:
     )
 
 
+def _build_cache_format(rule: Rule) -> CacheFormat:
+    args = dict(rule.args)
+    if rule.policy_name == "int8":
+        return CacheFormat("int8", group=int(args.get("group", 0)))
+    if rule.policy_name == "int4":
+        return CacheFormat("int4", group=int(args.get("group", 64)))
+    if rule.policy_name == "svd":
+        return CacheFormat("svd", rank=float(args.get("r", 0.25)))
+    return CacheFormat("none")
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionPlan:
     """An unresolved plan: an ordered rule list (last match wins)."""
@@ -323,13 +471,21 @@ class CompressionPlan:
         instead of being threaded through RunConfig flags.
         """
         # build (and thereby validate) each rule's policy exactly once, so a
-        # bad arg fails uniformly on every arch, not only where it matches
-        rule_policies = [_build_policy(rule, mesh) for rule in self.rules]
+        # bad arg fails uniformly on every arch, not only where it matches.
+        # Cache-only rules (int8/int4/svd) never apply to training sites;
+        # they validate through _build_cache_format instead.
+        rule_policies = [None if rule.policy_name in _CACHE_ONLY
+                         else _build_policy(rule, mesh) for rule in self.rules]
+        rule_formats = [_build_cache_format(rule)
+                        if rule.policy_name in _CACHE_ONLY | {"none"} else None
+                        for rule in self.rules]
         sites = []
         matched = [False] * len(self.rules)
         for sid, site in enumerate(enumerate_sites(cfg)):
             policy = _EXACT
             for ri, rule in enumerate(self.rules):
+                if rule.policy_name in _CACHE_ONLY:
+                    continue
                 if site.matches(rule.pattern):
                     matched[ri] = True
                     policy = rule_policies[ri]
@@ -339,6 +495,19 @@ class CompressionPlan:
                     n_in=site.n_in, multiplicity=site.multiplicity,
                 )
             )
+        cache_sites = []
+        for site in enumerate_cache_sites(cfg):
+            fmt = CacheFormat("none")
+            for ri, rule in enumerate(self.rules):
+                if rule_formats[ri] is None:
+                    continue
+                if site.matches(rule.pattern):
+                    matched[ri] = True
+                    fmt = rule_formats[ri]
+            if fmt.is_compressed:
+                # fail at resolution (with the site named), not at cache init
+                fmt.token_bytes(max(1, cfg.n_kv_heads), cfg.head_dim, 2)
+            cache_sites.append(CacheSite(site.path, site.stage, site.kind, fmt))
         for ri, hit in enumerate(matched):
             # A rule may legitimately miss this architecture (one spec is
             # shared across archs — ssm.in on a dense model, attn.* on a
@@ -349,10 +518,11 @@ class CompressionPlan:
                 warnings.warn(
                     f"compression rule {self.rules[ri].pattern!r} matches no "
                     f"site of {getattr(cfg, 'name', '?')} and no known "
-                    f"role (roles: {list(ROLES)})",
+                    f"role (roles: {list(ROLES + CACHE_ROLES)})",
                     stacklevel=2,
                 )
-        return ResolvedPlan(sites=_link_shared_sites(sites), plan=self)
+        return ResolvedPlan(sites=_link_shared_sites(sites), plan=self,
+                            cache_sites=tuple(cache_sites))
 
 
 def _link_shared_sites(sites: list[CompressedSite]) -> tuple[CompressedSite, ...]:
@@ -377,6 +547,7 @@ class ResolvedPlan:
 
     sites: tuple[CompressedSite, ...]
     plan: CompressionPlan | None = None
+    cache_sites: tuple[CacheSite, ...] = ()
 
     def __post_init__(self):
         lookup = {}
@@ -388,6 +559,19 @@ class ResolvedPlan:
         if stage < 0:
             return self._lookup.get(role)
         return self._lookup.get(f"stage{stage}.{kind}.{role}")
+
+    def cache_format(self, stage: int, kind: str) -> CacheFormat | None:
+        """The stored KV format of (stage, kind)'s cache group, or None
+        when the group keeps the base dtype (no site, or kind=none)."""
+        path = f"stage{stage}.{kind}.cache.kv"
+        for cs in self.cache_sites:
+            if cs.path == path and cs.fmt.is_compressed:
+                return cs.fmt
+        return None
+
+    @property
+    def compressed_cache_sites(self) -> tuple[CacheSite, ...]:
+        return tuple(cs for cs in self.cache_sites if cs.fmt.is_compressed)
 
     def head_site(self) -> CompressedSite | None:
         return self._lookup.get("lm_head")
@@ -406,6 +590,7 @@ class ResolvedPlan:
         return ResolvedPlan(
             sites=tuple(dataclasses.replace(s, key_fn=key_fn) for s in self.sites),
             plan=self.plan,
+            cache_sites=self.cache_sites,
         )
 
     def map_policies(self, fn) -> "ResolvedPlan":
@@ -417,6 +602,7 @@ class ResolvedPlan:
                 for s in self.sites
             ),
             plan=self.plan,
+            cache_sites=self.cache_sites,
         )
 
     def zero_telemetry(self) -> dict[str, jax.Array]:
@@ -438,6 +624,8 @@ class ResolvedPlan:
         for s in self.sites:
             lines.append(f"{s.path:40s} -> {s.policy.name}"
                          + ("" if s.is_exact else f" {s.policy}"))
+        for cs in self.cache_sites:
+            lines.append(f"{cs.path:40s} -> {cs.fmt}")
         return "\n".join(lines)
 
 
@@ -536,6 +724,17 @@ def plan_spec_from_legacy(rcfg) -> str:
     if getattr(rcfg, "pamm_on_ssm_inproj", False):
         rules.append(f"ssm.in={expr}")
     return ";".join(rules)
+
+
+def cache_plan_from_spec(spec: str) -> CompressionPlan:
+    """Parse a cache-compression spec. Accepts the full rule grammar
+    (``cache.kv=int8;swa/cache.kv=none``) plus the bare-policy shorthand
+    the CLI uses (``int8``, ``int4(group=64)``, ``svd(r=1/4)`` — sugar for
+    ``cache.kv=<policy>``)."""
+    spec = (spec or "").strip()
+    if spec and "=" not in spec.split("(", 1)[0]:
+        spec = f"cache.kv={spec}"
+    return CompressionPlan.parse(spec)
 
 
 def make_run_plan(rcfg) -> CompressionPlan:

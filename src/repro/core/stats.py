@@ -97,7 +97,8 @@ def site_telemetry_metrics(tele: dict) -> dict:
 
 def serving_cache_metrics(*, reserved_bytes: int, used_bytes: int,
                           capacity_bytes: int, pages_total: int = 0,
-                          pages_free: int = 0) -> dict:
+                          pages_free: int = 0,
+                          compression_x: float = 1.0) -> dict:
     """Reserved-vs-used KV-cache telemetry for the serving engine.
 
     ``reserved`` is what admission has committed (dense: whole slabs of
@@ -105,6 +106,10 @@ def serving_cache_metrics(*, reserved_bytes: int, used_bytes: int,
     actually written, ``capacity`` is the allocated backing store. The
     reserved/used gap is the overcommit a paged layout reclaims — these
     metrics make the paged win observable per step instead of inferred.
+    All byte figures are TRUE stored bytes: compressed pools (cache.kv=
+    int8/int4/svd) report their quantized/factored footprint, and
+    ``compression_x`` is the dense-bytes/stored-bytes ratio of the pool
+    set (1.0 when uncompressed).
     """
     mb = 1024.0 * 1024.0
     return {
@@ -114,6 +119,7 @@ def serving_cache_metrics(*, reserved_bytes: int, used_bytes: int,
         "cache/kv_utilization": used_bytes / max(1, reserved_bytes),
         "cache/kv_pages_total": float(pages_total),
         "cache/kv_pages_free": float(pages_free),
+        "cache/kv_compression_x": float(compression_x),
     }
 
 

@@ -26,6 +26,16 @@ and a tile whose table entry is -1 is skipped entirely (page-granular
 tile liveness; masking inside a live page still comes from ``page_pos``,
 the paged counterpart of ``slot_pos``). The jnp oracle gathers the pool
 through the same table and defers to :func:`flash_decode_ref`.
+
+Quantized variant (:func:`flash_paged_decode_quant`): the pool stores
+int8 (or nibble-packed int4) pages plus fp32 absmax scales — one scale
+per ``group``-wide slice of head_dim per token per kv head. The scales
+ride as two extra operand blocks gathered through the SAME block-table
+index maps as the pages, and dequantization happens in VMEM per kv tile
+(:func:`_dequant_tile`) right before the score dot — no fp16/fp32 cache
+is ever materialized in HBM. Host-side quantization helpers
+(``quantize_kv`` / ``dequantize_kv`` / ``pack_int4`` / ``unpack_int4``)
+live here too so models/ and serve/ share one rounding convention.
 """
 from __future__ import annotations
 
@@ -38,6 +48,55 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BK = 256
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV quantization (cache.kv=int8 / int4(group=...) — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def pack_int4(q):
+    """Pack int8 values in [-7, 7] into nibbles: (..., d) -> (..., d//2).
+    Adjacent dims pair into one byte (dim 2j low nibble, 2j+1 high)."""
+    lo = q[..., 0::2] & 0xF
+    hi = q[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p):
+    """Inverse of :func:`pack_int4`, sign-extending each nibble."""
+    lo = jnp.right_shift(jnp.left_shift(p, 4), 4)
+    hi = jnp.right_shift(p, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                p.shape[-1] * 2)
+
+
+def quantize_kv(x, bits: int, ngr: int):
+    """Symmetric absmax quantization of K/V rows.
+
+    x: (..., dh) -> (q int8 (..., dh) [int4: packed (..., dh//2)],
+    scale f32 (..., ngr)) with one scale per ``dh // ngr``-wide group.
+    The symmetric range ([-127,127] / [-7,7]) keeps the int4 nibble
+    sign-extension trivially exact.
+    """
+    dh = x.shape[-1]
+    g = dh // ngr
+    xg = x.astype(jnp.float32).reshape(*x.shape[:-1], ngr, g)
+    qmax = 127.0 if bits == 8 else 7.0
+    scale = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1), 1e-12) / qmax
+    q = jnp.clip(jnp.round(xg / scale[..., None]), -qmax, qmax)
+    q = q.reshape(*x.shape[:-1], dh).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dh: int):
+    """(..., dh | dh//2 packed) int8 + (..., ngr) f32 -> (..., dh) f32."""
+    if q.shape[-1] != dh:
+        q = unpack_int4(q)
+    ngr = scale.shape[-1]
+    g = dh // ngr
+    xg = q.astype(jnp.float32).reshape(*q.shape[:-1], ngr, g)
+    return (xg * scale[..., None]).reshape(*q.shape[:-1], dh)
 
 
 def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, spos_ref, o_ref,
@@ -137,16 +196,18 @@ def flash_decode_kernel(q, k, v, q_pos, slot_pos, *, causal: bool = True,
 
 
 def flash_decode_ref(q, k, v, q_pos, slot_pos, *, causal: bool = True,
-                     window: int = 0):
+                     window: int = 0, scale: float | None = None):
     """Pure-jnp oracle / CPU serving path (same signature, same math).
 
     Materializes (B, KV, G, S) scores — one query row per kv head — not the
-    (B, KV, G, 1, S) tensor the old chunk=1 sdpa path built.
+    (B, KV, G, 1, S) tensor the old chunk=1 sdpa path built. ``scale``
+    overrides the ``dh**-0.5`` score scale (the svd cache path operates on
+    rank-r vectors but must keep the original head_dim's scale).
     """
     B, Lq, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
-    scale = dh ** -0.5
+    scale = dh ** -0.5 if scale is None else scale
     qg = q.reshape(B, KV, G, dh).astype(jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
     qp = q_pos.reshape(B)[:, None, None, None]
@@ -215,11 +276,12 @@ def _paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ppos_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "window", "interpret")
+    jax.jit, static_argnames=("causal", "window", "interpret", "scale")
 )
 def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
                               page_pos, *, causal: bool = True,
-                              window: int = 0, interpret: bool = True):
+                              window: int = 0, interpret: bool = True,
+                              scale: float | None = None):
     """q: (B, 1, H, dh); k_pages, v_pages: (n_pages, page_size, KV, dh);
     q_pos: (B,) int32 absolute; block_table: (B, nb) int32 physical page
     per logical block (-1 = unmapped); page_pos: (n_pages, page_size)
@@ -234,7 +296,7 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
     n_pages, ps, KV, _ = k_pages.shape
     nb = block_table.shape[1]
     G = H // KV
-    scale = dh ** -0.5
+    scale = dh ** -0.5 if scale is None else scale
     pdh = (-dh) % 128
     pps = (-ps) % 8
     dhp, psp = dh + pdh, ps + pps
@@ -288,7 +350,8 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
 
 
 def flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table, page_pos,
-                           *, causal: bool = True, window: int = 0):
+                           *, causal: bool = True, window: int = 0,
+                           scale: float | None = None):
     """Pure-jnp oracle / CPU serving path: gather the pool through the
     block table, then defer to :func:`flash_decode_ref`. Unmapped blocks
     gather page 0 (which may belong to another sequence) and are masked
@@ -301,12 +364,13 @@ def flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table, page_pos,
     v = v_pages[btc].reshape(B, nb * ps, KV, dh)
     spos = jnp.where(block_table[..., None] >= 0, page_pos[btc], -1)
     return flash_decode_ref(q, k, v, q_pos, spos.reshape(B, nb * ps),
-                            causal=causal, window=window)
+                            causal=causal, window=window, scale=scale)
 
 
 def flash_paged_decode(q, k_pages, v_pages, q_pos, block_table, page_pos, *,
                        causal: bool = True, window: int = 0,
-                       use_pallas: bool | None = None):
+                       use_pallas: bool | None = None,
+                       scale: float | None = None):
     """Dispatch: Pallas paged kernel on TPU, jnp gather+reference elsewhere.
 
     Row-independence over the batch dim holds exactly as in the dense
@@ -318,9 +382,206 @@ def flash_paged_decode(q, k_pages, v_pages, q_pos, block_table, page_pos, *,
     if use_pallas:
         return flash_paged_decode_kernel(
             q, k_pages, v_pages, q_pos, block_table, page_pos, causal=causal,
-            window=window, interpret=jax.default_backend() != "tpu")
+            window=window, interpret=jax.default_backend() != "tpu",
+            scale=scale)
     return flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table,
-                                  page_pos, causal=causal, window=window)
+                                  page_pos, causal=causal, window=window,
+                                  scale=scale)
+
+
+def _dequant_tile(qt, sc, bits: int, group: int):
+    """Dequantize one kv tile in VMEM: (psp, dhq_padded) int8 pages +
+    (psp, sgr) f32 scales -> (psp, W) f32. int4 tiles unpack two nibbles
+    per byte first (zero pad bytes unpack to zero rows, which the
+    page_pos mask already excludes). ``sgr == 1`` is the per-token fast
+    path (one broadcast multiply); grouped scales reshape the padded tile
+    into (psp, sgr, group) — alignment holds because the group width is a
+    power of two and the lane padding is a multiple of 128."""
+    if bits == 4:
+        lo = jnp.right_shift(jnp.left_shift(qt, 4), 4)
+        hi = jnp.right_shift(qt, 4)
+        qt = jnp.stack([lo, hi], axis=-1).reshape(qt.shape[0],
+                                                  qt.shape[1] * 2)
+    x = qt.astype(jnp.float32)
+    if sc.shape[-1] == 1:
+        return x * sc
+    psp, W = x.shape
+    return (x.reshape(psp, sc.shape[-1], group) * sc[:, :, None]
+            ).reshape(psp, W)
+
+
+def _quant_paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
+                               vs_ref, ppos_ref, o_ref, m_ref, l_ref, acc_ref,
+                               *, nb: int, kv: int, causal: bool, window: int,
+                               scale: float, bits: int, group: int):
+    bh = pl.program_id(0)
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = bt_ref[bh // kv, jk]
+
+    @pl.when(page >= 0)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                  # (G, W)
+        k = _dequant_tile(k_ref[0, 0], ks_ref[0, 0], bits, group)
+        v = _dequant_tile(v_ref[0, 0], vs_ref[0, 0], bits, group)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                          # (G, psp)
+
+        qpos = qpos_ref[0, 0]
+        spos = ppos_ref[...]                               # (1, psp)
+        mask = spos >= 0
+        if causal:
+            mask = mask & (spos <= qpos)
+        if window > 0:
+            mask = mask & (qpos - spos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(jk == nb - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def flash_paged_decode_quant_kernel(q, k_pages, v_pages, k_scale, v_scale,
+                                    q_pos, block_table, page_pos, *,
+                                    causal: bool = True, window: int = 0,
+                                    interpret: bool = True):
+    """Paged decode over int8/int4 pages with dequantization fused into
+    the kv gather. Shapes as :func:`flash_paged_decode_kernel` plus
+    k_scale/v_scale ``(n_pages, page_size, KV, ngr)`` f32 — the scales
+    ride as extra operand blocks gathered through the same block-table
+    index maps, so a tile's scales land in VMEM alongside its pages and
+    the fp32 K/V only ever exists one tile at a time.
+
+    The static format is derived from shapes: int4 iff the page's last
+    dim is half the query head_dim (nibble-packed); the scale-group width
+    is ``dh // ngr``.
+    """
+    B, Lq, H, dh = q.shape
+    assert Lq == 1, "flash_paged_decode_quant is the single-query path"
+    n_pages, ps, KV, dhq = k_pages.shape
+    bits = 8 if dhq == dh else 4
+    assert dhq == (dh if bits == 8 else dh // 2), (dhq, dh)
+    ngr = k_scale.shape[-1]
+    group = dh // ngr
+    nb = block_table.shape[1]
+    G = H // KV
+    scale = dh ** -0.5
+    dhqp = dhq + (-dhq) % 128
+    W = dhqp if bits == 8 else 2 * dhqp   # dequantized tile width
+    pps = (-ps) % 8
+    psp = ps + pps
+    # sgr: scale lanes after padding. Per-token scales broadcast over the
+    # whole row; grouped scales pad with zero groups so the reshape in
+    # _dequant_tile stays group-aligned over the padded width.
+    sgr = 1 if ngr == 1 else W // group
+    assert sgr == 1 or (W % group == 0 and sgr >= ngr), (W, group, ngr)
+
+    qr = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, W - dh)))
+    qr = qr.reshape(B, KV, G, W).reshape(B * KV, G, W)
+    kt = jnp.pad(k_pages, ((0, 0), (0, pps), (0, 0), (0, dhqp - dhq))
+                 ).transpose(2, 0, 1, 3)        # (KV, n_pages, psp, dhqp)
+    vt = jnp.pad(v_pages, ((0, 0), (0, pps), (0, 0), (0, dhqp - dhq))
+                 ).transpose(2, 0, 1, 3)
+    kst = jnp.pad(k_scale, ((0, 0), (0, pps), (0, 0), (0, sgr - ngr))
+                  ).transpose(2, 0, 1, 3)       # (KV, n_pages, psp, sgr)
+    vst = jnp.pad(v_scale, ((0, 0), (0, pps), (0, 0), (0, sgr - ngr))
+                  ).transpose(2, 0, 1, 3)
+    pposr = jnp.pad(page_pos, ((0, 0), (0, pps)), constant_values=-1)
+    qposr = q_pos.reshape(B, 1).astype(jnp.int32)
+    bt = block_table.astype(jnp.int32)
+
+    def page_of(bh, jk, bt_ref):
+        return jnp.maximum(bt_ref[bh // KV, jk], 0)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_paged_decode_kernel, nb=nb, kv=KV,
+                          causal=causal, window=window, scale=scale,
+                          bits=bits, group=group),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * KV, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda bh, jk, bt_ref: (bh // KV, 0)),
+                pl.BlockSpec((1, G, W), lambda bh, jk, bt_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, 1, psp, dhqp),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, 1, psp, dhqp),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, 1, psp, sgr),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, 1, psp, sgr),
+                             lambda bh, jk, bt_ref:
+                             (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
+                pl.BlockSpec((1, psp),
+                             lambda bh, jk, bt_ref:
+                             (page_of(bh, jk, bt_ref), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, W),
+                                   lambda bh, jk, bt_ref: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, W), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, W), q.dtype),
+        interpret=interpret,
+    )(bt, qposr, qr, kt, vt, kst, vst, pposr)
+    return out.reshape(B, KV, G, W)[..., :dh].reshape(B, 1, H, dh)
+
+
+def flash_paged_decode_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                 q_pos, block_table, page_pos, *,
+                                 causal: bool = True, window: int = 0):
+    """jnp oracle / CPU serving path: dequantize the pools wholesale, then
+    defer to the fp paged reference — bit-for-bit the same rounding as the
+    fused kernel (both go int -> f32 -> scale multiply)."""
+    dh = q.shape[-1]
+    k = dequantize_kv(k_pages, k_scale, dh)
+    v = dequantize_kv(v_pages, v_scale, dh)
+    return flash_paged_decode_ref(q, k, v, q_pos, block_table, page_pos,
+                                  causal=causal, window=window)
+
+
+def flash_paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale, q_pos,
+                             block_table, page_pos, *, causal: bool = True,
+                             window: int = 0, use_pallas: bool | None = None):
+    """Dispatch: fused-dequant Pallas kernel on TPU, jnp dequant+reference
+    elsewhere. Same row-independence guarantees as the fp paged path."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_paged_decode_quant_kernel(
+            q, k_pages, v_pages, k_scale, v_scale, q_pos, block_table,
+            page_pos, causal=causal, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return flash_paged_decode_quant_ref(
+        q, k_pages, v_pages, k_scale, v_scale, q_pos, block_table, page_pos,
+        causal=causal, window=window)
 
 
 def flash_decode(q, k, v, q_pos, slot_pos, *, causal: bool = True,

@@ -47,7 +47,8 @@ def _serve_once(cfg, rcfg, params, args):
                          decode_block=args.decode_block,
                          cache_layout=args.cache_layout,
                          page_size=args.page_size,
-                         pool_tokens=args.pool_tokens or None)
+                         pool_tokens=args.pool_tokens or None,
+                         cache_compress=args.cache_compress)
     results = engine.run(_build_requests(cfg, args))
     return results, engine.stats()
 
@@ -71,6 +72,11 @@ def main(argv=None):
     ap.add_argument("--pool-tokens", type=int, default=0,
                     help="KV pool budget in tokens per pool "
                          "(0 = dense-equivalent worst case)")
+    ap.add_argument("--cache-compress", default="",
+                    help="cache-side CompressionPlan spec for the paged "
+                         "KV pools: 'int8', 'int4(group=64)', "
+                         "'svd(r=1/4)' or full 'cache.kv=...' rule form "
+                         "(requires --cache-layout paged; DESIGN.md §9)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"])
     ap.add_argument("--compression", default="",
@@ -102,11 +108,14 @@ def main(argv=None):
           f"p50 {stats['p50_token_latency_ms']:.2f} ms | "
           f"p95 {stats['p95_token_latency_ms']:.2f} ms | "
           f"cache {stats['cache_slot_bytes'] / 1e6:.2f} MB/slot")
-    print(f"[{args.cache_layout}] kv capacity "
+    layout = args.cache_layout + (
+        f"+{args.cache_compress}" if args.cache_compress else "")
+    print(f"[{layout}] kv capacity "
           f"{stats['cache/kv_capacity_mb']:.2f} MB | peak reserved "
           f"{stats['peak_kv_reserved_bytes'] / 2**20:.2f} MB | peak used "
           f"{stats['peak_kv_used_bytes'] / 2**20:.2f} MB | "
           f"peak concurrency {stats['peak_active']} | "
+          f"compression x{stats['cache/kv_compression_x']:.2f} | "
           f"{stats['prefill_compiles']} prefill compiles")
 
     if args.smoke:

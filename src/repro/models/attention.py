@@ -30,7 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import SiteCtx, exact_ctx
-from repro.kernels.flash_decode import flash_decode, flash_paged_decode
+from repro.kernels.flash_decode import (
+    flash_decode,
+    flash_paged_decode,
+    flash_paged_decode_quant,
+    quantize_kv,
+)
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
 from repro.runtime.sharding import maybe_constrain
 
@@ -262,11 +267,12 @@ def paged_addresses(positions, block_table, ring, page_size: int, nb: int):
     return page, off
 
 
-def paged_insert(cache: PagedKVCache, k_new, v_new, positions) -> PagedKVCache:
+def paged_insert(cache, k_new, v_new, positions):
     """Insert one decode step's K/V rows (B, 1, KV, dh) at ``positions``
     (B, 1) through the block table. Invalid positions / unmapped blocks
     are dropped — the paged counterpart of ``cache_insert``'s parked-slot
-    trick."""
+    trick. Works on any paged cache whose pages match ``k_new``'s trailing
+    dims (fp pools, and the svd cache's rank-r pools)."""
     n_pages, ps = cache.k_pages.shape[:2]
     nb = cache.block_table.shape[1]
     page, off = paged_addresses(positions, cache.block_table, cache.ring,
@@ -280,6 +286,120 @@ def paged_insert(cache: PagedKVCache, k_new, v_new, positions) -> PagedKVCache:
             v_new[:, 0].astype(cache.v_pages.dtype), mode="drop"),
         page_pos=cache.page_pos.at[p1, o1].set(positions[:, 0], mode="drop"),
     )
+
+
+class QuantPagedKVCache(NamedTuple):
+    """Paged decode cache with int8 / nibble-packed int4 pages (DESIGN §9).
+
+    Same page-pool + block-table layout as :class:`PagedKVCache`, but each
+    K/V row is stored absmax-quantized with fp32 scales — one scale per
+    ``group``-wide slice of head_dim per token per kv head. All static
+    format facts are recoverable from shapes (no metadata leaves, so the
+    pytree stays scannable): int4 iff ``k_pages.shape[-1] == dh // 2``,
+    and the group width is ``dh // k_scale.shape[-1]``.
+    """
+
+    k_pages: jax.Array     # (n_pages, page_size, KV, dh) int8 — int4: (..., dh//2)
+    v_pages: jax.Array
+    k_scale: jax.Array     # (n_pages, page_size, KV, ngr) f32
+    v_scale: jax.Array
+    page_pos: jax.Array    # (n_pages, page_size) int32; -1 = empty
+    block_table: jax.Array  # (B, nb) int32; -1 = unmapped
+    ring: jax.Array        # () bool-as-int32
+
+
+def init_quant_paged_kv_cache(B: int, logical: int, page_size: int,
+                              n_pages: int, kv: int, dh: int, bits: int,
+                              ngr: int, ring: bool) -> QuantPagedKVCache:
+    assert logical % page_size == 0, (logical, page_size)
+    assert bits in (8, 4), bits
+    dhq = dh if bits == 8 else dh // 2
+    return QuantPagedKVCache(
+        k_pages=jnp.zeros((n_pages, page_size, kv, dhq), jnp.int8),
+        v_pages=jnp.zeros((n_pages, page_size, kv, dhq), jnp.int8),
+        k_scale=jnp.zeros((n_pages, page_size, kv, ngr), jnp.float32),
+        v_scale=jnp.zeros((n_pages, page_size, kv, ngr), jnp.float32),
+        page_pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        block_table=jnp.full((B, logical // page_size), -1, jnp.int32),
+        ring=jnp.array(1 if ring else 0, jnp.int32),
+    )
+
+
+def quant_cache_bits(cache: QuantPagedKVCache, dh: int) -> int:
+    return 8 if cache.k_pages.shape[-1] == dh else 4
+
+
+def paged_insert_quant(cache: QuantPagedKVCache, k_new, v_new, positions,
+                       dh: int) -> QuantPagedKVCache:
+    """Quantize-on-write: one decode step's rows (B, 1, KV, dh) become
+    int pages + scales at their block-table addresses."""
+    bits = quant_cache_bits(cache, dh)
+    ngr = cache.k_scale.shape[-1]
+    n_pages, ps = cache.k_pages.shape[:2]
+    nb = cache.block_table.shape[1]
+    kq, ks = quantize_kv(k_new, bits, ngr)
+    vq, vs = quantize_kv(v_new, bits, ngr)
+    page, off = paged_addresses(positions, cache.block_table, cache.ring,
+                                ps, nb)
+    page = jnp.where(page >= 0, page, n_pages)
+    p1, o1 = page[:, 0], off[:, 0]
+    return cache._replace(
+        k_pages=cache.k_pages.at[p1, o1].set(kq[:, 0], mode="drop"),
+        v_pages=cache.v_pages.at[p1, o1].set(vq[:, 0], mode="drop"),
+        k_scale=cache.k_scale.at[p1, o1].set(ks[:, 0], mode="drop"),
+        v_scale=cache.v_scale.at[p1, o1].set(vs[:, 0], mode="drop"),
+        page_pos=cache.page_pos.at[p1, o1].set(positions[:, 0], mode="drop"),
+    )
+
+
+class SVDPagedKVCache(NamedTuple):
+    """Paged decode cache storing K/V in rank-r factored form (KQ-SVD
+    idiom): pages hold rank-r coefficients, and per-layer per-kv-head
+    orthonormal bases (columns of the top-r eigenvectors of W_k^T W_k /
+    W_v^T W_v) reconstruct the head space. Scores are computed directly
+    in the rank-r space — project q through the k basis, run the ordinary
+    paged kernel with the ORIGINAL head_dim's softmax scale, then map the
+    output back through the v basis — so the fp paged kernel is reused
+    unchanged and no dh-sized K/V is ever materialized.
+    """
+
+    k_pages: jax.Array     # (n_pages, page_size, KV, r)
+    v_pages: jax.Array     # (n_pages, page_size, KV, r)
+    k_basis: jax.Array     # (KV, dh, r) orthonormal columns
+    v_basis: jax.Array     # (KV, dh, r)
+    page_pos: jax.Array
+    block_table: jax.Array
+    ring: jax.Array
+
+
+def init_svd_paged_kv_cache(B: int, logical: int, page_size: int,
+                            n_pages: int, kv: int, dh: int, r: int, dtype,
+                            ring: bool) -> SVDPagedKVCache:
+    assert logical % page_size == 0, (logical, page_size)
+    assert 1 <= r <= dh, (r, dh)
+    # identity-prefix default basis: exact for r == dh even before
+    # calibration (serve/cache.install_svd_bases replaces it per layer)
+    eye = jnp.broadcast_to(jnp.eye(dh, r, dtype=jnp.float32)[None],
+                           (kv, dh, r))
+    return SVDPagedKVCache(
+        k_pages=jnp.zeros((n_pages, page_size, kv, r), dtype),
+        v_pages=jnp.zeros((n_pages, page_size, kv, r), dtype),
+        k_basis=eye,
+        v_basis=eye,
+        page_pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        block_table=jnp.full((B, logical // page_size), -1, jnp.int32),
+        ring=jnp.array(1 if ring else 0, jnp.int32),
+    )
+
+
+def svd_project_kv(x, basis):
+    """(B, L, KV, dh) through (KV, dh, r) -> (B, L, KV, r) coefficients."""
+    return jnp.einsum("blkd,kdr->blkr", x.astype(jnp.float32),
+                      basis.astype(jnp.float32))
+
+
+# every paged cache layout the serving runtime knows how to pool/allocate
+PAGED_CACHE_TYPES = (PagedKVCache, QuantPagedKVCache, SVDPagedKVCache)
 
 
 # ---------------------------------------------------------------------------
@@ -340,7 +460,39 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
     q, k, v = _project_qkv(params, x, x, exact_ctx(), None, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    if isinstance(cache, PagedKVCache):
+    if isinstance(cache, QuantPagedKVCache):
+        cache = paged_insert_quant(cache, k, v, positions, cfg.head_dim)
+        out = flash_paged_decode_quant(
+            q, cache.k_pages, cache.v_pages, cache.k_scale, cache.v_scale,
+            positions[:, 0], cache.block_table, cache.page_pos,
+            causal=True, window=window, use_pallas=kernel,
+        )
+    elif isinstance(cache, SVDPagedKVCache):
+        # KQ-SVD: scores in the rank-r space equal scores in head space
+        # when K is reconstructed through the same orthonormal basis, so
+        # the fp paged kernel runs unchanged on coefficients — only the
+        # softmax scale must stay the ORIGINAL head_dim's.
+        dh = q.shape[-1]
+        kv_h = cache.k_pages.shape[2]
+        B, L, H, _ = q.shape
+        r = cache.k_pages.shape[-1]
+        kc = svd_project_kv(k, cache.k_basis).astype(x.dtype)
+        vc = svd_project_kv(v, cache.v_basis).astype(x.dtype)
+        cache = paged_insert(cache, kc, vc, positions)
+        qg = q.reshape(B, L, kv_h, H // kv_h, dh).astype(jnp.float32)
+        qc = jnp.einsum("blkgd,kdr->blkgr", qg,
+                        cache.k_basis.astype(jnp.float32))
+        qc = qc.reshape(B, L, H, r).astype(q.dtype)
+        out = flash_paged_decode(
+            qc, cache.k_pages, cache.v_pages, positions[:, 0],
+            cache.block_table, cache.page_pos,
+            causal=True, window=window, scale=dh ** -0.5, use_pallas=kernel,
+        )
+        og = out.reshape(B, L, kv_h, H // kv_h, r).astype(jnp.float32)
+        out = jnp.einsum("blkgr,kdr->blkgd", og,
+                         cache.v_basis.astype(jnp.float32))
+        out = out.reshape(B, L, H, dh).astype(q.dtype)
+    elif isinstance(cache, PagedKVCache):
         cache = paged_insert(cache, k, v, positions)
         out = flash_paged_decode(
             q, cache.k_pages, cache.v_pages, positions[:, 0],

@@ -224,7 +224,7 @@ def block_cache_specs(kind, cfg, *, shard_cache_seq: bool = False):
 
 def init_block_cache(kind, cfg, B: int, max_len: int, dtype, *, n_kv_eff=None,
                      layout: str = "dense", page_size: int = 0,
-                     pool_pages: int | None = None):
+                     pool_pages: int | None = None, cache_format=None):
     """Zero-initialized cache (used by serve_step input_specs and decoding).
 
     ``layout="paged"`` builds :class:`attention.PagedKVCache` for the
@@ -235,21 +235,48 @@ def init_block_cache(kind, cfg, B: int, max_len: int, dtype, *, n_kv_eff=None,
     ring size rounded up to whole pages, and wrap-around stays modulo
     arithmetic. Recurrent/SSM/cross-attn caches are O(1) or fixed-size
     per slot, so they keep their dense layout under either setting.
+
+    ``cache_format`` (a compressed :class:`core.plan.CacheFormat`) swaps
+    the page pool for its quantized / low-rank variant. ``pool_pages`` is
+    a *byte budget* expressed in dense pages, so a compressed pool gets
+    proportionally more pages at the same budget (capped at the dense
+    worst case — extra capacity beyond "every slot full" is dead weight).
     """
     if kind in ("attn", "swa", "latt", "moe"):
         win = _window_for(kind, cfg)
         size = min(max_len, win) if win else max_len
         kv = n_kv_eff or cfg.n_kv_heads
+        dh = cfg.head_dim
+        compressed = cache_format is not None and cache_format.is_compressed
+        if compressed and layout != "paged":
+            raise ValueError(
+                f"cache.kv={cache_format} requires cache_layout='paged' — "
+                "the dense slab has no compressed storage path")
         if layout == "paged":
             if page_size < 1:
                 raise ValueError(f"paged cache needs page_size >= 1, got {page_size}")
             logical = -(-size // page_size) * page_size
             worst = B * (logical // page_size)
+            if compressed and pool_pages is not None:
+                # same byte budget buys 1/ratio-sized tokens -> ratio x pages
+                base_tb = jnp.zeros((), dtype).dtype.itemsize * 2 * kv * dh
+                fmt_tb = cache_format.token_bytes(
+                    kv, dh, jnp.zeros((), dtype).dtype.itemsize)
+                pool_pages = int(pool_pages * base_tb // max(1, fmt_tb))
             n_pages = worst if pool_pages is None else min(pool_pages, worst)
+            n_pages = max(1, n_pages)
+            if compressed and cache_format.kind in ("int8", "int4"):
+                bits = 8 if cache_format.kind == "int8" else 4
+                return attn_lib.init_quant_paged_kv_cache(
+                    B, logical, page_size, n_pages, kv, dh, bits,
+                    cache_format.n_groups(dh), bool(win))
+            if compressed and cache_format.kind == "svd":
+                return attn_lib.init_svd_paged_kv_cache(
+                    B, logical, page_size, n_pages, kv, dh,
+                    cache_format.svd_rank(dh), dtype, bool(win))
             return attn_lib.init_paged_kv_cache(
-                B, logical, page_size, max(1, n_pages), kv, cfg.head_dim,
-                dtype, bool(win))
-        return attn_lib.init_kv_cache(B, size, kv, cfg.head_dim, dtype, bool(win))
+                B, logical, page_size, n_pages, kv, dh, dtype, bool(win))
+        return attn_lib.init_kv_cache(B, size, kv, dh, dtype, bool(win))
     if kind == "xattn":
         kv = n_kv_eff or cfg.n_kv_heads
         return (

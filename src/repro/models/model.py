@@ -282,7 +282,7 @@ def loss_fn(cfg, rcfg, plan, params, batch, key):
 # ---------------------------------------------------------------------------
 def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None,
                 layout: str | None = None, page_size: int | None = None,
-                pool_pages: int | None = None):
+                pool_pages: int | None = None, cache_plan=None):
     """Decode caches for the whole stack (B = batch slots).
 
     ``layout``/``page_size`` default from ``rcfg.cache_layout`` /
@@ -291,20 +291,31 @@ def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None,
     plus block tables (models/attention.PagedKVCache) so KV residency is
     allocated page-by-page at serve time. ``pool_pages`` caps each pool
     (None = dense-equivalent worst case).
+
+    ``cache_plan`` (a resolved CompressionPlan, default parsed from
+    ``rcfg.cache_compress``) maps each stage's attention caches to a
+    :class:`core.plan.CacheFormat` — int8/int4 pools quantize on write,
+    svd pools store rank-r coefficients (models/attention.py). A
+    compressed pool's page count grows with its compression ratio at the
+    same ``pool_pages`` byte budget (models/blocks.init_block_cache).
     """
     cdt, _ = _dtype(rcfg)
     layout = layout or getattr(rcfg, "cache_layout", "dense")
     if layout not in ("dense", "paged"):
         raise ValueError(f"cache_layout must be dense|paged, got {layout!r}")
     page_size = page_size or getattr(rcfg, "kv_page_size", 64)
+    if cache_plan is None:
+        spec = getattr(rcfg, "cache_compress", "") or ""
+        cache_plan = plan_lib.cache_plan_from_spec(spec).resolve(cfg)
     caches = []
-    for unit, rep in cfg.stages:
+    for si, (unit, rep) in enumerate(cfg.stages):
         unit_caches = []
         for kind in unit:
             one = blk.init_block_cache(kind, cfg, B, max_len, cdt,
                                        n_kv_eff=n_kv_eff, layout=layout,
                                        page_size=page_size,
-                                       pool_pages=pool_pages)
+                                       pool_pages=pool_pages,
+                                       cache_format=cache_plan.cache_format(si, kind))
             stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None], (rep,) + t.shape), one)
             unit_caches.append(stacked)
         caches.append(unit_caches)

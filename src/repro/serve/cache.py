@@ -33,7 +33,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import KVCache, PagedKVCache, paged_addresses
+from repro.kernels.flash_decode import quantize_kv
+from repro.models.attention import (
+    PAGED_CACHE_TYPES,
+    KVCache,
+    PagedKVCache,
+    QuantPagedKVCache,
+    SVDPagedKVCache,
+    paged_addresses,
+)
 
 
 def write_slot(full, one, slot):
@@ -82,25 +90,71 @@ def _splice_paged(fc: PagedKVCache, oc: KVCache, row, slot, prompt_len):
     """Install ``row`` as ``slot``'s block table and scatter the batch-1
     prefill cache ``oc`` into the owned pages. ``fc`` leaves carry the
     layer-stack dim; the row is shared by every layer of the stack."""
-    nlayers, n_pages, ps = fc.k_pages.shape[:3]
-    nb = fc.block_table.shape[2]
-    bt = fc.block_table.at[:, slot].set(row)
-    # newly owned pages may hold a previous owner's positions: reset so
-    # only rows this splice (or a later decode step) writes are live
-    resetp = jnp.where(row >= 0, row, n_pages)
-    ppos = fc.page_pos.at[:, resetp].set(-1, mode="drop")
-
-    spos = oc.slot_pos[:, 0]                       # (layers, S) absolute
-    spos = jnp.where(spos < prompt_len, spos, -1)  # bucketing pad rows
-    page, off = paged_addresses(
-        spos, jnp.broadcast_to(row[None], (nlayers, nb)), fc.ring[0], ps, nb)
-    page = jnp.where(page >= 0, page, n_pages)     # invalid -> OOB (drop)
-    lidx = jnp.arange(nlayers)[:, None]
+    bt, ppos, spos, page, off, lidx = _paged_splice_targets(
+        fc, oc, row, slot, prompt_len)
     return fc._replace(
         k_pages=fc.k_pages.at[lidx, page, off].set(
             oc.k[:, 0].astype(fc.k_pages.dtype), mode="drop"),
         v_pages=fc.v_pages.at[lidx, page, off].set(
             oc.v[:, 0].astype(fc.v_pages.dtype), mode="drop"),
+        page_pos=ppos.at[lidx, page, off].set(spos, mode="drop"),
+        block_table=bt,
+    )
+
+
+def _paged_splice_targets(fc, oc, row, slot, prompt_len):
+    """Shared splice plumbing: block-table install, page_pos reset, and
+    the (page, off) scatter addresses of the prompt's valid rows."""
+    nlayers, n_pages, ps = fc.k_pages.shape[:3]
+    nb = fc.block_table.shape[2]
+    bt = fc.block_table.at[:, slot].set(row)
+    resetp = jnp.where(row >= 0, row, n_pages)
+    ppos = fc.page_pos.at[:, resetp].set(-1, mode="drop")
+    spos = oc.slot_pos[:, 0]
+    spos = jnp.where(spos < prompt_len, spos, -1)
+    page, off = paged_addresses(
+        spos, jnp.broadcast_to(row[None], (nlayers, nb)), fc.ring[0], ps, nb)
+    page = jnp.where(page >= 0, page, n_pages)
+    lidx = jnp.arange(nlayers)[:, None]
+    return bt, ppos, spos, page, off, lidx
+
+
+def _splice_paged_quant(fc: QuantPagedKVCache, oc: KVCache, row, slot,
+                        prompt_len):
+    """Quantize the batch-1 prefill cache's K/V rows (exactly the decode
+    path's quantizer) and scatter pages + scales through the new row."""
+    dh = oc.k.shape[-1]
+    bits = 8 if fc.k_pages.shape[-1] == dh else 4
+    ngr = fc.k_scale.shape[-1]
+    bt, ppos, spos, page, off, lidx = _paged_splice_targets(
+        fc, oc, row, slot, prompt_len)
+    kq, ks = quantize_kv(oc.k[:, 0], bits, ngr)
+    vq, vs = quantize_kv(oc.v[:, 0], bits, ngr)
+    return fc._replace(
+        k_pages=fc.k_pages.at[lidx, page, off].set(kq, mode="drop"),
+        v_pages=fc.v_pages.at[lidx, page, off].set(vq, mode="drop"),
+        k_scale=fc.k_scale.at[lidx, page, off].set(ks, mode="drop"),
+        v_scale=fc.v_scale.at[lidx, page, off].set(vs, mode="drop"),
+        page_pos=ppos.at[lidx, page, off].set(spos, mode="drop"),
+        block_table=bt,
+    )
+
+
+def _splice_paged_svd(fc: SVDPagedKVCache, oc: KVCache, row, slot,
+                      prompt_len):
+    """Project the prefill K/V into each layer's rank-r basis, then
+    scatter the coefficients like any paged splice."""
+    bt, ppos, spos, page, off, lidx = _paged_splice_targets(
+        fc, oc, row, slot, prompt_len)
+    kb = fc.k_basis.astype(jnp.float32)   # (layers, KV, dh, r)
+    vb = fc.v_basis.astype(jnp.float32)
+    kc = jnp.einsum("lskd,lkdr->lskr", oc.k[:, 0].astype(jnp.float32), kb)
+    vc = jnp.einsum("lskd,lkdr->lskr", oc.v[:, 0].astype(jnp.float32), vb)
+    return fc._replace(
+        k_pages=fc.k_pages.at[lidx, page, off].set(
+            kc.astype(fc.k_pages.dtype), mode="drop"),
+        v_pages=fc.v_pages.at[lidx, page, off].set(
+            vc.astype(fc.v_pages.dtype), mode="drop"),
         page_pos=ppos.at[lidx, page, off].set(spos, mode="drop"),
         block_table=bt,
     )
@@ -113,6 +167,10 @@ def write_slot_paged(full, one, rows, slot, prompt_len):
     flags, recurrent/SSM states, cross-attn image K/V, and any KVCache
     kept dense) take the ordinary slot splice, with bucketing pad rows
     masked for KV nodes."""
+    if isinstance(full, QuantPagedKVCache):
+        return _splice_paged_quant(full, one, rows, slot, prompt_len)
+    if isinstance(full, SVDPagedKVCache):
+        return _splice_paged_svd(full, one, rows, slot, prompt_len)
     if isinstance(full, PagedKVCache):
         return _splice_paged(full, one, rows, slot, prompt_len)
     if isinstance(full, KVCache):
@@ -124,17 +182,32 @@ def write_slot_paged(full, one, rows, slot, prompt_len):
 
 
 def kv_cache_nodes(caches):
-    """Yield every self-attention KV node (dense KVCache or PagedKVCache)
-    of an engine cache tree, in stage order (engine telemetry/allocators).
+    """Yield every self-attention KV node (dense KVCache or any paged
+    pool) of an engine cache tree, in stage order (telemetry/allocators).
     """
     for stage in caches:
         for node in stage:
-            if isinstance(node, (KVCache, PagedKVCache)):
+            if isinstance(node, (KVCache,) + PAGED_CACHE_TYPES):
                 yield node
 
 
 def kv_token_bytes(node) -> int:
-    """K+V bytes per cached token across the node's layer stack."""
+    """K+V bytes per cached token across the node's layer stack.
+
+    For compressed pools this is the TRUE stored footprint — int pages
+    plus their fp32 scales, or rank-r coefficient rows — which is what
+    makes ``PageAllocator`` admission capacity grow with the compression
+    ratio at a fixed byte budget.
+    """
+    if isinstance(node, QuantPagedKVCache):
+        layers, _, _, kv, dhq = node.k_pages.shape
+        ngr = node.k_scale.shape[-1]
+        return 2 * layers * kv * (
+            dhq * node.k_pages.dtype.itemsize
+            + ngr * node.k_scale.dtype.itemsize)
+    if isinstance(node, SVDPagedKVCache):
+        layers, _, _, kv, r = node.k_pages.shape
+        return 2 * layers * kv * r * node.k_pages.dtype.itemsize
     if isinstance(node, PagedKVCache):
         layers, _, _, kv, dh = node.k_pages.shape
         return 2 * layers * kv * dh * node.k_pages.dtype.itemsize
@@ -168,10 +241,18 @@ def shard_slots(caches, mesh):
 
     from repro.runtime import sharding as sh
 
-    if any(isinstance(n, PagedKVCache) for n in kv_cache_nodes(caches)):
+    paged = [type(n).__name__ for n in kv_cache_nodes(caches)
+             if isinstance(n, PAGED_CACHE_TYPES)]
+    if paged:
         raise NotImplementedError(
-            "paged caches have no slot axis to shard — serve cache_layout="
-            "'paged' single-host, or use the dense layout on a mesh")
+            f"cannot shard a paged engine cache over a mesh: found "
+            f"{paged[0]} pools ({len(paged)} paged node(s)), whose page "
+            "pools are shared across sequences and have no per-slot batch "
+            "axis to partition. Paged serving (and its compressed int8/"
+            "int4/svd variants) is single-host only — drop the mesh "
+            "argument to ServeEngine, or fall back to the dense layout "
+            "(cache_layout='dense'), which shards its slot axis over the "
+            "mesh's data axes.")
 
     axes = sh.data_axis_names(mesh)
     dp = sh.dp_degree(mesh)
@@ -189,6 +270,49 @@ def shard_slots(caches, mesh):
         return jax.device_put(a, NamedSharding(mesh, PS(None, entry)))
 
     return jax.tree.map(place, caches)
+
+
+def _top_eig_basis(w_heads, r: int):
+    """Top-r orthonormal column basis of each head's projection range.
+
+    ``w_heads``: (layers, d, KV, dh). The K/V rows live in the row space
+    of the head's (d, dh) weight slab; eigendecomposing W^T W (dh x dh,
+    symmetric PSD) gives the right-singular basis without touching the
+    d-sized dim — calibration-free (KQ-SVD idiom: weight spectra stand in
+    for activation spectra). Returns (layers, KV, dh, r), f32.
+    """
+    w = w_heads.astype(jnp.float32)
+    gram = jnp.einsum("ldkh,ldkg->lkhg", w, w)        # (layers, KV, dh, dh)
+    _, vecs = jnp.linalg.eigh(gram)                    # ascending eigvals
+    return vecs[..., -r:]                              # top-r columns
+
+
+def install_svd_bases(caches, params, cfg):
+    """Replace every SVD pool's identity-prefix bases with the top-r
+    eigenbases of the owning stage's K/V projection weights.
+
+    The engine calls this once at build time; pools then store rank-r
+    coefficients in a basis aligned with what the projections can emit,
+    which is what makes truncation lossy-but-tolerable instead of
+    arbitrary coordinate dropping.
+    """
+    out = []
+    for si, ((unit, rep), stage) in enumerate(zip(cfg.stages, caches)):
+        new_stage = []
+        for bi, (kind, node) in enumerate(zip(unit, stage)):
+            if isinstance(node, SVDPagedKVCache):
+                r = node.k_pages.shape[-1]
+                dh = cfg.head_dim
+                ap = params["stages"][si][bi]["attn"]
+                d = ap["wk"].shape[-2]
+                kv = ap["wk"].shape[-1] // dh
+                wk = ap["wk"].reshape(rep, d, kv, dh)
+                wv = ap["wv"].reshape(rep, d, kv, dh)
+                node = node._replace(k_basis=_top_eig_basis(wk, r),
+                                     v_basis=_top_eig_basis(wv, r))
+            new_stage.append(node)
+        out.append(new_stage)
+    return out
 
 
 def park_positions(pos, active):

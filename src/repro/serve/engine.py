@@ -61,8 +61,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stats as stats_lib
+from repro.core.plan import cache_plan_from_spec
 from repro.models import decode_step, init_caches, prefill
-from repro.models.attention import PagedKVCache
+from repro.models.attention import PAGED_CACHE_TYPES, SVDPagedKVCache
 from repro.serve import cache as cache_lib
 from repro.serve import paging
 from repro.serve.sampling import SamplingParams, sample_tokens
@@ -108,7 +109,8 @@ class ServeEngine:
                  decode_block: int = 8, plan=None, n_kv_eff: int | None = None,
                  mesh=None, cache_layout: str | None = None,
                  page_size: int | None = None, pool_tokens: int | None = None,
-                 prefill_buckets: bool | None = None):
+                 prefill_buckets: bool | None = None,
+                 cache_compress: str | None = None):
         if cfg.embed_inputs:
             raise NotImplementedError(
                 "serving needs a token frontend; embed-input archs "
@@ -123,6 +125,15 @@ class ServeEngine:
         self.cache_layout = cache_layout or getattr(rcfg, "cache_layout",
                                                     "dense")
         self.page_size = page_size or getattr(rcfg, "kv_page_size", 64)
+        spec = (cache_compress if cache_compress is not None
+                else getattr(rcfg, "cache_compress", "") or "")
+        self.cache_plan = cache_plan_from_spec(spec).resolve(cfg)
+        if self.cache_plan.compressed_cache_sites and \
+                self.cache_layout != "paged":
+            raise ValueError(
+                f"cache_compress={spec!r} compresses the paged page pools; "
+                "the dense layout has no compressed storage path — pass "
+                "cache_layout='paged' or drop cache_compress")
         if mesh is not None and self.cache_layout == "paged":
             raise NotImplementedError(
                 "paged serving is single-host: the page pool has no slot "
@@ -144,20 +155,46 @@ class ServeEngine:
                                   n_kv_eff=n_kv_eff,
                                   layout=self.cache_layout,
                                   page_size=self.page_size,
-                                  pool_pages=pool_pages)
+                                  pool_pages=pool_pages,
+                                  cache_plan=self.cache_plan)
+        if any(isinstance(n, SVDPagedKVCache)
+               for n in cache_lib.kv_cache_nodes(self.caches)):
+            # calibration-free bases from the K/V projection spectra
+            self.caches = cache_lib.install_svd_bases(self.caches, params,
+                                                      cfg)
         # one host-side allocator per page pool, in cache-tree order (the
         # same traversal _alloc_rows uses); dense layout has none and
-        # admission degenerates to the free-slot check
-        self.allocators = [
-            paging.PageAllocator(paging.spec_from_cache(
-                node, cache_lib.kv_token_bytes(node)))
-            for node in cache_lib.kv_cache_nodes(self.caches)
-            if isinstance(node, PagedKVCache)
-        ]
+        # admission degenerates to the free-slot check. pool_labels /
+        # pool_formats parallel the allocator list (submit errors, stats).
+        self.allocators = []
+        self.pool_labels: list[str] = []
+        self.pool_formats: list[str] = []
+        dense_itemsize = jnp.dtype(rcfg.compute_dtype).itemsize
+        comp_bytes = dense_bytes = 0
+        for si, ((unit, _rep), stage) in enumerate(zip(cfg.stages,
+                                                       self.caches)):
+            for kind, node in zip(unit, stage):
+                if not isinstance(node, PAGED_CACHE_TYPES):
+                    continue
+                tb = cache_lib.kv_token_bytes(node)
+                layers, kv = node.k_pages.shape[0], node.k_pages.shape[3]
+                dense_tb = 2 * layers * kv * cfg.head_dim * dense_itemsize
+                comp_bytes += tb
+                dense_bytes += dense_tb
+                fmt = self.cache_plan.cache_format(si, kind)
+                self.allocators.append(paging.PageAllocator(
+                    paging.spec_from_cache(node, tb)))
+                self.pool_labels.append(f"stage{si}.{kind}")
+                self.pool_formats.append(str(fmt) if fmt else
+                                         str(jnp.dtype(rcfg.compute_dtype)))
+        # bytes/token ratio vs an uncompressed pool set (1.0 when dense
+        # or uncompressed paged) — the headline admission multiplier
+        self.kv_compression_x = (dense_bytes / comp_bytes
+                                 if comp_bytes else 1.0)
         self._kv_capacity_bytes = 0
         for node in cache_lib.kv_cache_nodes(self.caches):
             tb = cache_lib.kv_token_bytes(node)
-            if isinstance(node, PagedKVCache):
+            if isinstance(node, PAGED_CACHE_TYPES):
                 self._kv_capacity_bytes += node.k_pages.shape[1] * \
                     node.k_pages.shape[2] * tb
             else:
@@ -302,13 +339,18 @@ class ServeEngine:
                 f"{req.max_new_tokens} exceeds max_len={self.max_len}")
         if self.cfg.vision_tokens and req.image_embeds is None:
             raise ValueError(f"request {req.uid}: arch needs image_embeds")
-        for alloc in self.allocators:
+        for alloc, label, fmt in zip(self.allocators, self.pool_labels,
+                                     self.pool_formats):
             need = alloc.blocks_for(lp + req.max_new_tokens)
             if need > alloc.spec.n_pages:
+                total = lp + req.max_new_tokens
+                cap_tok = alloc.spec.n_pages * alloc.spec.page_size
                 raise ValueError(
-                    f"request {req.uid}: needs {need} pages but the pool "
-                    f"has {alloc.spec.n_pages} total — raise pool_tokens "
-                    f"or shrink prompt_len + max_new_tokens")
+                    f"request {req.uid}: needs {need} pages "
+                    f"({total} tokens) but pool {label} [{fmt}] has "
+                    f"{alloc.spec.n_pages} pages ({cap_tok} tokens) total "
+                    f"— {total - cap_tok} tokens over capacity; raise "
+                    f"pool_tokens or shrink prompt_len + max_new_tokens")
         self.queue.append(req)
 
     @property
@@ -350,7 +392,7 @@ class ServeEngine:
         for stage in self.caches:
             rstage = []
             for node in stage:
-                if isinstance(node, PagedKVCache):
+                if isinstance(node, PAGED_CACHE_TYPES):
                     alloc = self.allocators[ai]
                     ai += 1
                     row = alloc.allocate(slot, alloc.blocks_for(total))
@@ -585,7 +627,8 @@ class ServeEngine:
         return stats_lib.serving_cache_metrics(
             reserved_bytes=reserved, used_bytes=used,
             capacity_bytes=self._kv_capacity_bytes,
-            pages_total=pages_total, pages_free=pages_free)
+            pages_total=pages_total, pages_free=pages_free,
+            compression_x=self.kv_compression_x)
 
     def stats(self) -> dict:
         lat = sorted(self.latency_samples)
@@ -611,6 +654,15 @@ class ServeEngine:
             "peak_active": self.peak_active,
             "peak_kv_reserved_bytes": self.peak_reserved_bytes,
             "peak_kv_used_bytes": self.peak_used_bytes,
+            # per-site cache-compression telemetry: pool label -> stored
+            # format and true bytes/token (scales included)
+            "cache_pools": {
+                label: {"format": fmt,
+                        "token_bytes": alloc.spec.token_bytes,
+                        "pages": alloc.spec.n_pages}
+                for label, fmt, alloc in zip(
+                    self.pool_labels, self.pool_formats, self.allocators)
+            },
         }
         out.update(self.cache_telemetry())
         return out
