@@ -20,6 +20,12 @@ cache bytes between ``cache_layout=dense`` (whole max_len slabs) and
 compressed pools (``cache.kv=int8|int4|svd``) at the same pool byte
 budget: acceptance is int8 admitting >= 1.8x the fp paged concurrency
 (results persisted to BENCH_serving_kvquant.json by run.py).
+
+``run_disagg`` (``serving_disagg``) benchmarks the disaggregated stage
+API per stage (prefill / insert / generate) and the Router's replica
+scaling: aggregate admissible concurrency must grow >= 3x from 1 to 4
+decode replicas at a fixed per-replica pool budget, tokens identical to
+the solo engine.
 """
 from __future__ import annotations
 
@@ -301,7 +307,84 @@ def run_paged_kvquant(budget: str = "small"):
         f"int8 concurrency ratio {ratio_int8:.2f} < 1.8x acceptance"
 
 
+def run_disagg(budget: str = "small"):
+    """Disaggregated serving microbenchmark (``serving_disagg``).
+
+    Per-stage costs of the JetStream-shaped API — prefill tok/s, insert
+    latency (page reservation + slot splice), generate tok/s — then the
+    scaling claim: a Router over N decode replicas at a FIXED per-replica
+    pool budget admits ~N x the aggregate concurrency of one replica.
+    Acceptance: >= 3x aggregate admissible concurrency from 1 -> 4
+    replicas, with routed token streams identical to the solo engine.
+    """
+    from repro.serve import Router
+
+    arch = "internlm2-1.8b_smoke" if budget == "small" else "llama-60m"
+    if budget == "small":
+        lengths = [8, 10, 12, 8, 14, 10, 12, 8, 10, 12, 14, 8]
+        gen, page, max_len, pool_tokens, slots = 12, 8, 64, 32, 2
+    else:
+        lengths = [64, 96, 128, 64, 192, 96, 128, 64, 96, 128, 192, 64]
+        gen, page, max_len, pool_tokens, slots = 64, 64, 512, 256, 2
+    cfg = get_config(arch)
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).tolist()
+               for l in lengths]
+    mk = lambda: [Request(uid=i, tokens=prompts[i], max_new_tokens=gen)
+                  for i in range(len(prompts))]
+    eng_kw = dict(max_slots=slots, max_len=max_len, decode_block=8,
+                  cache_layout="paged", page_size=page,
+                  pool_tokens=pool_tokens)
+
+    # ---- per-stage costs on one engine (warm pass first: compiles) ------
+    solo = ServeEngine(cfg, rcfg, params, **eng_kw)
+    out_solo = solo.run(mk())
+    solo.reset_stats()
+    out_solo = solo.run(mk())
+    st = solo.stats()
+    emit("serving_disagg_prefill_tok_s", st["prefill_tok_s"],
+         f"batch-1 prompt stage, {st['prefill_compiles']} bucket compiles")
+    emit("serving_disagg_insert_ms", st["insert_ms_avg"],
+         f"page reservation + slot splice, {st['insert_count']} inserts")
+    emit("serving_disagg_generate_tok_s", st["decode_tok_s"],
+         "fused decode blocks across all slots")
+
+    # ---- replica scaling at fixed per-replica pool budget ---------------
+    def routed(n: int):
+        router = Router([ServeEngine(cfg, rcfg, params, **eng_kw)
+                         for _ in range(n)])
+        out = router.run(mk())
+        return router, out
+
+    peaks = {}
+    for n in (1, 2, 4):
+        router, out = routed(n)
+        for i in range(len(prompts)):
+            assert out[i].tokens == out_solo[i].tokens, \
+                f"replicas={n}: request {i} diverged from solo"
+        peaks[n] = router.peak_active
+        emit(f"serving_disagg_concurrency_{n}replica", peaks[n],
+             f"pool={pool_tokens}tok/replica, {len(prompts)} reqs, "
+             f"replicas used: {len(set(router.placement.values()))}")
+    scaling = peaks[4] / max(1, peaks[1])
+    emit("serving_disagg_scaling_1_to_4", scaling,
+         "acceptance: >= 3x aggregate admissible concurrency at fixed "
+         "per-replica pool budget")
+    note(f"[serving-disagg] {arch} {len(prompts)} reqs gen={gen} "
+         f"pool={pool_tokens}tok/replica: aggregate concurrency "
+         f"{peaks[1]} -> {peaks[2]} -> {peaks[4]} for 1 -> 2 -> 4 "
+         f"replicas ({scaling:.1f}x); prefill {st['prefill_tok_s']:.0f} "
+         f"tok/s, insert {st['insert_ms_avg']:.1f} ms, generate "
+         f"{st['decode_tok_s']:.0f} tok/s; routed tokens == solo")
+    assert scaling >= 3.0, \
+        f"replica scaling {scaling:.2f} < 3x acceptance (1 -> 4 replicas)"
+
+
 if __name__ == "__main__":
     run()
     run_paged_mixed()
     run_paged_kvquant()
+    run_disagg()

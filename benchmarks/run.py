@@ -29,6 +29,7 @@ HARNESSES = [
     ("serving_engine", "benchmarks.bench_serving"),
     ("serving_paged_mixed", "benchmarks.bench_serving:run_paged_mixed"),
     ("serving_kvquant", "benchmarks.bench_serving:run_paged_kvquant"),
+    ("serving_disagg", "benchmarks.bench_serving:run_disagg"),
     ("multidevice_scaling", "benchmarks.bench_scaling"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]

@@ -584,6 +584,87 @@ def flash_paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale, q_pos,
         causal=causal, window=window)
 
 
+def _shard_fold(a, dp: int):
+    """(B, ...) -> (dp, B/dp, ...): slot-major contiguous chunks, so shard
+    ``s`` owns slots [s*B/dp, (s+1)*B/dp) — the same slot->shard map the
+    engine's admission uses."""
+    return a.reshape(dp, a.shape[0] // dp, *a.shape[1:])
+
+
+def flash_sharded_paged_decode(q, k_pages, v_pages, q_pos, block_table,
+                               page_pos, *, causal: bool = True,
+                               window: int = 0,
+                               use_pallas: bool | None = None,
+                               scale: float | None = None):
+    """Paged decode against per-shard page pools (disaggregated serving).
+
+    Pool leaves carry a leading shard axis — k_pages/v_pages
+    ``(dp, n_pages_shard, page_size, KV, dh)``, block_table ``(dp, B/dp,
+    nb)`` with page ids LOCAL to the shard, page_pos ``(dp, n_pages_shard,
+    page_size)`` — while q ``(B, 1, H, dh)`` / q_pos ``(B,)`` stay
+    slot-major over the whole batch. The jnp path vmaps the per-shard
+    reference over the shard axis, so every gather stays inside its own
+    shard's pool and GSPMD partitions the whole step shard-locally (no
+    cross-device gathers). The Pallas path folds the shard axis into the
+    pool axis and offsets each shard's (local) block-table ids by
+    ``shard * n_pages_shard`` — page ids only ever point into their own
+    shard's page range, so the gathers are physically shard-local there
+    too; a real-TPU mesh deployment should wrap this in shard_map so the
+    partitioner can see that (the interpret-mode parity tests pin the
+    numerics either way).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    dp, npl = k_pages.shape[0], k_pages.shape[1]
+    B = q.shape[0]
+    assert B % dp == 0, (B, dp)
+    if use_pallas:
+        nb = block_table.shape[-1]
+        kg = k_pages.reshape(dp * npl, *k_pages.shape[2:])
+        vg = v_pages.reshape(dp * npl, *v_pages.shape[2:])
+        pg = page_pos.reshape(dp * npl, page_pos.shape[-1])
+        off = (jnp.arange(dp, dtype=jnp.int32) * npl)[:, None, None]
+        btg = jnp.where(block_table >= 0, block_table + off, -1)
+        return flash_paged_decode_kernel(
+            q, kg, vg, q_pos, btg.reshape(B, nb), pg, causal=causal,
+            window=window, interpret=jax.default_backend() != "tpu",
+            scale=scale)
+    fn = functools.partial(flash_paged_decode_ref, causal=causal,
+                           window=window, scale=scale)
+    out = jax.vmap(fn)(_shard_fold(q, dp), k_pages, v_pages,
+                       _shard_fold(q_pos, dp), block_table, page_pos)
+    return out.reshape(B, *out.shape[2:])
+
+
+def flash_sharded_paged_decode_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                     q_pos, block_table, page_pos, *,
+                                     causal: bool = True, window: int = 0,
+                                     use_pallas: bool | None = None):
+    """Quantized counterpart of :func:`flash_sharded_paged_decode`: int
+    pages + fp32 scales carry the same leading shard axis; dequantization
+    stays fused per shard (vmapped ref) or per globalized tile (kernel)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    dp, npl = k_pages.shape[0], k_pages.shape[1]
+    B = q.shape[0]
+    assert B % dp == 0, (B, dp)
+    if use_pallas:
+        nb = block_table.shape[-1]
+        glob = lambda a: a.reshape(dp * npl, *a.shape[2:])
+        off = (jnp.arange(dp, dtype=jnp.int32) * npl)[:, None, None]
+        btg = jnp.where(block_table >= 0, block_table + off, -1)
+        return flash_paged_decode_quant_kernel(
+            q, glob(k_pages), glob(v_pages), glob(k_scale), glob(v_scale),
+            q_pos, btg.reshape(B, nb), glob(page_pos), causal=causal,
+            window=window, interpret=jax.default_backend() != "tpu")
+    fn = functools.partial(flash_paged_decode_quant_ref, causal=causal,
+                           window=window)
+    out = jax.vmap(fn)(_shard_fold(q, dp), k_pages, v_pages, k_scale,
+                       v_scale, _shard_fold(q_pos, dp), block_table,
+                       page_pos)
+    return out.reshape(B, *out.shape[2:])
+
+
 def flash_decode(q, k, v, q_pos, slot_pos, *, causal: bool = True,
                  window: int = 0, use_pallas: bool | None = None):
     """Dispatch: Pallas kernel on TPU, jnp reference math elsewhere.

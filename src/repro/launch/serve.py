@@ -7,6 +7,15 @@ Requests get staggered prompt lengths so admissions and evictions overlap
 mid-stream (the continuous-batching path, not one static batch). ``--smoke``
 runs the workload twice and asserts identical outputs and tok/s > 0 — the
 CI serving smoke job.
+
+``--replicas N`` serves through the disaggregated front instead of one
+engine: a serve.Router over N decode replicas (each with ``--batch``
+slots and its own page pools) with page-aware least-loaded admission;
+``--dedicated-prefill`` adds a separate prefill engine whose Prefixes
+cross to the decode replicas in host form. ``--mesh-data D`` runs ONE
+engine with its pools sharded into D per-replica shards on a device
+mesh (the other scaling axis; needs D devices — pair with
+XLA_FLAGS=--xla_force_host_platform_device_count=D on CPU).
 """
 from __future__ import annotations
 
@@ -41,14 +50,34 @@ def _build_requests(cfg, args) -> list[Request]:
     return requests
 
 
+def _make_engine(cfg, rcfg, params, args, *, mesh=None, slots=None):
+    return ServeEngine(cfg, rcfg, params, max_slots=slots or args.batch,
+                       max_len=args.prompt_len + args.gen + 1,
+                       decode_block=args.decode_block,
+                       cache_layout=args.cache_layout,
+                       page_size=args.page_size,
+                       pool_tokens=args.pool_tokens or None,
+                       cache_compress=args.cache_compress,
+                       mesh=mesh)
+
+
 def _serve_once(cfg, rcfg, params, args):
-    engine = ServeEngine(cfg, rcfg, params, max_slots=args.batch,
-                         max_len=args.prompt_len + args.gen + 1,
-                         decode_block=args.decode_block,
-                         cache_layout=args.cache_layout,
-                         page_size=args.page_size,
-                         pool_tokens=args.pool_tokens or None,
-                         cache_compress=args.cache_compress)
+    mesh = None
+    if args.mesh_data > 1:
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(args.mesh_data, 1)
+    if args.replicas > 1:
+        from repro.serve import Router
+
+        replicas = [_make_engine(cfg, rcfg, params, args)
+                    for _ in range(args.replicas)]
+        pf = (_make_engine(cfg, rcfg, params, args, slots=1)
+              if args.dedicated_prefill else None)
+        router = Router(replicas, prefill_engine=pf)
+        results = router.run(_build_requests(cfg, args))
+        return results, router.stats()
+    engine = _make_engine(cfg, rcfg, params, args, mesh=mesh)
     results = engine.run(_build_requests(cfg, args))
     return results, engine.stats()
 
@@ -86,6 +115,16 @@ def main(argv=None):
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="decode replicas behind a serve.Router (each gets "
+                         "--batch slots and its own page pools)")
+    ap.add_argument("--dedicated-prefill", action="store_true",
+                    help="with --replicas: prefill on a separate engine and "
+                         "hand Prefixes to decode replicas in host form")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="shard one engine's slots/pools into this many "
+                         "per-replica shards on a device mesh (needs that "
+                         "many devices)")
     ap.add_argument("--smoke", action="store_true",
                     help="run twice, assert determinism and tok/s > 0")
     args = ap.parse_args(argv)
@@ -103,20 +142,31 @@ def main(argv=None):
         print(f"req {uid}: prompt={r.prompt_len} new={len(r.tokens)} "
               f"finish={r.finish_reason} {r.decode_tok_s:.1f} tok/s "
               f"sample={r.tokens[:8]}")
-    print(f"prefill {stats['prefill_tok_s']:.1f} tok/s | "
-          f"decode {stats['decode_tok_s']:.1f} tok/s | "
-          f"p50 {stats['p50_token_latency_ms']:.2f} ms | "
-          f"p95 {stats['p95_token_latency_ms']:.2f} ms | "
-          f"cache {stats['cache_slot_bytes'] / 1e6:.2f} MB/slot")
-    layout = args.cache_layout + (
-        f"+{args.cache_compress}" if args.cache_compress else "")
-    print(f"[{layout}] kv capacity "
-          f"{stats['cache/kv_capacity_mb']:.2f} MB | peak reserved "
-          f"{stats['peak_kv_reserved_bytes'] / 2**20:.2f} MB | peak used "
-          f"{stats['peak_kv_used_bytes'] / 2**20:.2f} MB | "
-          f"peak concurrency {stats['peak_active']} | "
-          f"compression x{stats['cache/kv_compression_x']:.2f} | "
-          f"{stats['prefill_compiles']} prefill compiles")
+    if args.replicas > 1:
+        print(f"router: {stats['replicas']} replicas"
+              + (" + dedicated prefill" if stats["dedicated_prefill"]
+                 else "")
+              + f" | prefill {stats['prefill_tok_s']:.1f} tok/s | "
+              f"decode {stats['decode_tok_s']:.1f} tok/s | "
+              f"peak aggregate concurrency {stats['peak_active_aggregate']}"
+              f" | peak reserved "
+              f"{stats['peak_kv_reserved_bytes'] / 2**20:.2f} MB")
+    else:
+        print(f"prefill {stats['prefill_tok_s']:.1f} tok/s | "
+              f"decode {stats['decode_tok_s']:.1f} tok/s | "
+              f"p50 {stats['p50_token_latency_ms']:.2f} ms | "
+              f"p95 {stats['p95_token_latency_ms']:.2f} ms | "
+              f"cache {stats['cache_slot_bytes'] / 1e6:.2f} MB/slot")
+        layout = args.cache_layout + (
+            f"+{args.cache_compress}" if args.cache_compress else "")
+        print(f"[{layout}] kv capacity "
+              f"{stats['cache/kv_capacity_mb']:.2f} MB | peak reserved "
+              f"{stats['peak_kv_reserved_bytes'] / 2**20:.2f} MB | peak used "
+              f"{stats['peak_kv_used_bytes'] / 2**20:.2f} MB | "
+              f"peak concurrency {stats['peak_active']} | "
+              f"replica shards {stats['replica_shards']} | "
+              f"compression x{stats['cache/kv_compression_x']:.2f} | "
+              f"{stats['prefill_compiles']} prefill compiles")
 
     if args.smoke:
         again, stats2 = _serve_once(cfg, rcfg, params, args)

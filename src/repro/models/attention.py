@@ -34,6 +34,8 @@ from repro.kernels.flash_decode import (
     flash_decode,
     flash_paged_decode,
     flash_paged_decode_quant,
+    flash_sharded_paged_decode,
+    flash_sharded_paged_decode_quant,
     quantize_kv,
 )
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
@@ -403,6 +405,54 @@ PAGED_CACHE_TYPES = (PagedKVCache, QuantPagedKVCache, SVDPagedKVCache)
 
 
 # ---------------------------------------------------------------------------
+# sharded paged pools (disaggregated serving: per-replica shards on a mesh)
+# ---------------------------------------------------------------------------
+def paged_cache_sharded(cache) -> bool:
+    """True when a paged node carries a leading shard (replica) axis:
+    block_table is (dp, B/dp, nb) instead of (B, nb). Shapes are the only
+    metadata (the pytree must stay scannable), exactly like the quantized
+    cache's bits-from-shapes convention."""
+    return cache.block_table.ndim == 3
+
+
+def _shard_axes(cache):
+    """vmap in_axes for one per-layer sharded paged node: pool/table leaves
+    carry the shard axis at 0; per-layer scalars (ring) and replicated
+    bases broadcast."""
+    if isinstance(cache, QuantPagedKVCache):
+        return QuantPagedKVCache(0, 0, 0, 0, 0, 0, None)
+    if isinstance(cache, SVDPagedKVCache):
+        return SVDPagedKVCache(0, 0, None, None, 0, 0, None)
+    return PagedKVCache(0, 0, 0, 0, None)
+
+
+def _fold_shards(a, dp: int):
+    return a.reshape(dp, a.shape[0] // dp, *a.shape[1:])
+
+
+def sharded_paged_insert(cache, k_new, v_new, positions):
+    """:func:`paged_insert` over per-shard pools: rows (B, 1, KV, w) split
+    into slot-contiguous (dp, B/dp, ...) chunks, each scattered through its
+    own shard's block table — writes never cross a shard boundary."""
+    dp = cache.block_table.shape[0]
+    return jax.vmap(paged_insert, in_axes=(_shard_axes(cache), 0, 0, 0),
+                    out_axes=_shard_axes(cache))(
+        cache, _fold_shards(k_new, dp), _fold_shards(v_new, dp),
+        _fold_shards(positions, dp))
+
+
+def sharded_paged_insert_quant(cache, k_new, v_new, positions, dh: int):
+    """Quantize-on-write across per-shard pools (vmapped
+    :func:`paged_insert_quant`; the static head_dim closes over)."""
+    dp = cache.block_table.shape[0]
+    fn = lambda c, k, v, p: paged_insert_quant(c, k, v, p, dh)
+    return jax.vmap(fn, in_axes=(_shard_axes(cache), 0, 0, 0),
+                    out_axes=_shard_axes(cache))(
+        cache, _fold_shards(k_new, dp), _fold_shards(v_new, dp),
+        _fold_shards(positions, dp))
+
+
+# ---------------------------------------------------------------------------
 # block-level entry points
 # ---------------------------------------------------------------------------
 def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
@@ -461,29 +511,44 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if isinstance(cache, QuantPagedKVCache):
-        cache = paged_insert_quant(cache, k, v, positions, cfg.head_dim)
-        out = flash_paged_decode_quant(
-            q, cache.k_pages, cache.v_pages, cache.k_scale, cache.v_scale,
-            positions[:, 0], cache.block_table, cache.page_pos,
-            causal=True, window=window, use_pallas=kernel,
-        )
+        if paged_cache_sharded(cache):
+            cache = sharded_paged_insert_quant(cache, k, v, positions,
+                                               cfg.head_dim)
+            out = flash_sharded_paged_decode_quant(
+                q, cache.k_pages, cache.v_pages, cache.k_scale,
+                cache.v_scale, positions[:, 0], cache.block_table,
+                cache.page_pos, causal=True, window=window,
+                use_pallas=kernel,
+            )
+        else:
+            cache = paged_insert_quant(cache, k, v, positions, cfg.head_dim)
+            out = flash_paged_decode_quant(
+                q, cache.k_pages, cache.v_pages, cache.k_scale,
+                cache.v_scale, positions[:, 0], cache.block_table,
+                cache.page_pos, causal=True, window=window,
+                use_pallas=kernel,
+            )
     elif isinstance(cache, SVDPagedKVCache):
         # KQ-SVD: scores in the rank-r space equal scores in head space
         # when K is reconstructed through the same orthonormal basis, so
         # the fp paged kernel runs unchanged on coefficients — only the
         # softmax scale must stay the ORIGINAL head_dim's.
         dh = q.shape[-1]
-        kv_h = cache.k_pages.shape[2]
+        kv_h = cache.k_pages.shape[-2]   # robust to a leading shard axis
         B, L, H, _ = q.shape
         r = cache.k_pages.shape[-1]
         kc = svd_project_kv(k, cache.k_basis).astype(x.dtype)
         vc = svd_project_kv(v, cache.v_basis).astype(x.dtype)
-        cache = paged_insert(cache, kc, vc, positions)
+        sharded = paged_cache_sharded(cache)
+        cache = (sharded_paged_insert(cache, kc, vc, positions) if sharded
+                 else paged_insert(cache, kc, vc, positions))
         qg = q.reshape(B, L, kv_h, H // kv_h, dh).astype(jnp.float32)
         qc = jnp.einsum("blkgd,kdr->blkgr", qg,
                         cache.k_basis.astype(jnp.float32))
         qc = qc.reshape(B, L, H, r).astype(q.dtype)
-        out = flash_paged_decode(
+        paged_fn = (flash_sharded_paged_decode if sharded
+                    else flash_paged_decode)
+        out = paged_fn(
             qc, cache.k_pages, cache.v_pages, positions[:, 0],
             cache.block_table, cache.page_pos,
             causal=True, window=window, scale=dh ** -0.5, use_pallas=kernel,
@@ -493,12 +558,20 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
                          cache.v_basis.astype(jnp.float32))
         out = out.reshape(B, L, H, dh).astype(q.dtype)
     elif isinstance(cache, PagedKVCache):
-        cache = paged_insert(cache, k, v, positions)
-        out = flash_paged_decode(
-            q, cache.k_pages, cache.v_pages, positions[:, 0],
-            cache.block_table, cache.page_pos,
-            causal=True, window=window, use_pallas=kernel,
-        )
+        if paged_cache_sharded(cache):
+            cache = sharded_paged_insert(cache, k, v, positions)
+            out = flash_sharded_paged_decode(
+                q, cache.k_pages, cache.v_pages, positions[:, 0],
+                cache.block_table, cache.page_pos,
+                causal=True, window=window, use_pallas=kernel,
+            )
+        else:
+            cache = paged_insert(cache, k, v, positions)
+            out = flash_paged_decode(
+                q, cache.k_pages, cache.v_pages, positions[:, 0],
+                cache.block_table, cache.page_pos,
+                causal=True, window=window, use_pallas=kernel,
+            )
     else:
         cache = cache_insert(cache, k, v, positions)
         out = flash_decode(

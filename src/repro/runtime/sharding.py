@@ -214,6 +214,16 @@ def data_pspec(mesh: Mesh) -> PS:
     return PS(axes if len(axes) > 1 else axes[0])
 
 
+def slot_shard_entry(mesh: Mesh):
+    """PartitionSpec ENTRY (not a full spec) for a per-slot / per-replica
+    axis sharded over the data axes — what serve/cache.shard_slots puts on
+    axis 1 of layer-stacked serving leaves. None on a pure-TP mesh."""
+    axes = data_axis_names(mesh)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
 def validate_batch_divisible(global_batch: int, mesh: Mesh, *,
                              grad_accum: int = 1, where: str = "train step"):
     """Raise a clear error when the global batch cannot shard over the data

@@ -1,15 +1,22 @@
 """Serving subsystem: continuous-batching engine over the Pallas
-attention path, dense or paged KV-cache layout (DESIGN.md §9)."""
+attention path, dense or paged KV-cache layout, JetStream-shaped
+prefill/insert/generate stages with a multi-replica router
+(DESIGN.md §9)."""
 from repro.serve.cache import (cache_bytes, mask_pad_rows, read_slot,
                                slot_bytes, write_slot, write_slot_paged)
-from repro.serve.engine import Request, RequestOutput, ServeEngine
+from repro.serve.engine import (DecodeState, Prefix, Request, RequestOutput,
+                                ServeEngine)
 from repro.serve.paging import PageAllocator, PoolSpec
+from repro.serve.router import Router
 from repro.serve.sampling import SamplingParams, request_keys, sample_tokens
 
 __all__ = [
     "ServeEngine",
+    "Router",
     "Request",
     "RequestOutput",
+    "Prefix",
+    "DecodeState",
     "SamplingParams",
     "sample_tokens",
     "request_keys",

@@ -160,13 +160,63 @@ def _splice_paged_svd(fc: SVDPagedKVCache, oc: KVCache, row, slot,
     )
 
 
+def _pool_fields(node) -> tuple[str, ...]:
+    """The node's leaves that carry the page-pool / block-table layout
+    (and hence, when sharded, the leading per-replica shard axis at
+    position 1 of the layer-stacked tree). Ring flags and svd bases are
+    per-layer / replicated and are NOT pool leaves."""
+    if isinstance(node, QuantPagedKVCache):
+        return ("k_pages", "v_pages", "k_scale", "v_scale", "page_pos",
+                "block_table")
+    return ("k_pages", "v_pages", "page_pos", "block_table")
+
+
+def paged_node_sharded(node) -> bool:
+    """A layer-stacked paged node with per-replica shards: block_table is
+    (layers, dp, B/dp, nb) instead of (layers, B, nb)."""
+    return node.block_table.ndim == 4
+
+
+def _take_shard(node, shard):
+    """Slice shard ``shard``'s sub-pool out of a sharded stacked node —
+    the result looks exactly like a single-host stacked node ((layers,
+    n_pages_shard, ...) pools, (layers, B/dp, nb) table), so every
+    existing splice path applies unchanged. ``shard`` may be a tracer."""
+    return node._replace(**{
+        f: jax.lax.dynamic_index_in_dim(getattr(node, f), shard, axis=1,
+                                        keepdims=False)
+        for f in _pool_fields(node)})
+
+
+def _put_shard(node, sub, shard):
+    """Write a spliced per-shard sub-pool back into the sharded node."""
+    return node._replace(**{
+        f: jax.lax.dynamic_update_index_in_dim(
+            getattr(node, f), getattr(sub, f), shard, axis=1)
+        for f in _pool_fields(node)})
+
+
 def write_slot_paged(full, one, rows, slot, prompt_len):
     """Splice a batch-1 prefill cache ``one`` into ``slot`` of the paged
     engine cache ``full``. ``rows`` mirrors the cache tree: a (nb,) int32
     block-table row per paged node, None elsewhere. Dense nodes (ring
     flags, recurrent/SSM states, cross-attn image K/V, and any KVCache
     kept dense) take the ordinary slot splice, with bucketing pad rows
-    masked for KV nodes."""
+    masked for KV nodes.
+
+    Sharded paged nodes (leading per-replica shard axis; block-table page
+    ids local to their shard) route the GLOBAL slot id to (shard, local
+    slot) by the engine's contiguous-chunk map — slot // (B/dp) — then
+    splice the shard's sub-pool with the ordinary single-host paths. The
+    ``rows`` entries must hold shard-LOCAL page ids (the engine keeps one
+    allocator per pool per shard)."""
+    if isinstance(full, PAGED_CACHE_TYPES) and paged_node_sharded(full):
+        slots_per_shard = full.block_table.shape[2]
+        shard = slot // slots_per_shard
+        sub = _take_shard(full, shard)
+        sub = write_slot_paged(sub, one, rows, slot % slots_per_shard,
+                               prompt_len)
+        return _put_shard(full, sub, shard)
     if isinstance(full, QuantPagedKVCache):
         return _splice_paged_quant(full, one, rows, slot, prompt_len)
     if isinstance(full, SVDPagedKVCache):
@@ -199,20 +249,31 @@ def kv_token_bytes(node) -> int:
     makes ``PageAllocator`` admission capacity grow with the compression
     ratio at a fixed byte budget.
     """
+    # Indexed from the ends so the same formulas cover single-host pools
+    # (layers, n_pages, ps, KV, w) AND per-replica sharded pools
+    # (layers, dp, n_pages_shard, ps, KV, w).
     if isinstance(node, QuantPagedKVCache):
-        layers, _, _, kv, dhq = node.k_pages.shape
+        layers, kv, dhq = (node.k_pages.shape[0], node.k_pages.shape[-2],
+                           node.k_pages.shape[-1])
         ngr = node.k_scale.shape[-1]
         return 2 * layers * kv * (
             dhq * node.k_pages.dtype.itemsize
             + ngr * node.k_scale.dtype.itemsize)
-    if isinstance(node, SVDPagedKVCache):
-        layers, _, _, kv, r = node.k_pages.shape
-        return 2 * layers * kv * r * node.k_pages.dtype.itemsize
-    if isinstance(node, PagedKVCache):
-        layers, _, _, kv, dh = node.k_pages.shape
-        return 2 * layers * kv * dh * node.k_pages.dtype.itemsize
+    if isinstance(node, (SVDPagedKVCache, PagedKVCache)):
+        layers, kv, w = (node.k_pages.shape[0], node.k_pages.shape[-2],
+                         node.k_pages.shape[-1])
+        return 2 * layers * kv * w * node.k_pages.dtype.itemsize
     layers, _, _, kv, dh = node.k.shape
     return 2 * layers * kv * dh * node.k.dtype.itemsize
+
+
+def pool_geometry(node) -> tuple[int, int]:
+    """(total physical pages, page_size) of a stacked paged node, sharded
+    or not — capacity accounting that doesn't care about the layout."""
+    if paged_node_sharded(node):
+        return (node.k_pages.shape[1] * node.k_pages.shape[2],
+                node.k_pages.shape[3])
+    return node.k_pages.shape[1], node.k_pages.shape[2]
 
 
 def cache_bytes(caches) -> int:
@@ -228,35 +289,32 @@ def slot_bytes(caches, max_slots: int) -> int:
 
 
 def shard_slots(caches, mesh):
-    """Lay the engine cache out on ``mesh`` with the slot (batch) axis
+    """Lay the engine cache out on ``mesh`` with per-sequence state
     sharded over the data axes.
 
-    Per-layer scalar leaves (rank <= 1 ring flags) are replicated; every
-    batched leaf — axis 0 layer stack, axis 1 slots — gets the data axes on
-    axis 1. Requires ``max_slots`` divisible by the DP degree (a clear
-    error here beats the opaque XLA one at first decode).
+    Dense leaves — axis 0 layer stack, axis 1 slots — get the data axes on
+    axis 1; per-layer scalars (rank <= 1 ring flags) replicate. Paged
+    nodes are first RESHAPED into per-replica shards: each pool/table leaf
+    grows a shard axis at position 1 — k_pages (layers, dp, n_pages/dp,
+    ps, KV, w), block_table (layers, dp, B/dp, nb) — whose page ids are
+    shard-LOCAL (page j of shard s is physical row [s, j]), and that
+    shard axis takes the data axes. Shard s then owns the contiguous slot
+    chunk [s*B/dp, (s+1)*B/dp), every block-table gather stays inside its
+    own shard's pool, and GSPMD partitions the fused decode loop with no
+    cross-device gathers. SVD bases replicate (they are weight-derived
+    per-layer constants, shared by all replicas).
+
+    Requires ``max_slots`` AND every pool's page count divisible by the
+    DP degree (a clear error here beats the opaque XLA one at first
+    decode).
     """
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as PS
 
     from repro.runtime import sharding as sh
 
-    paged = [type(n).__name__ for n in kv_cache_nodes(caches)
-             if isinstance(n, PAGED_CACHE_TYPES)]
-    if paged:
-        raise NotImplementedError(
-            f"cannot shard a paged engine cache over a mesh: found "
-            f"{paged[0]} pools ({len(paged)} paged node(s)), whose page "
-            "pools are shared across sequences and have no per-slot batch "
-            "axis to partition. Paged serving (and its compressed int8/"
-            "int4/svd variants) is single-host only — drop the mesh "
-            "argument to ServeEngine, or fall back to the dense layout "
-            "(cache_layout='dense'), which shards its slot axis over the "
-            "mesh's data axes.")
-
-    axes = sh.data_axis_names(mesh)
     dp = sh.dp_degree(mesh)
-    entry = axes if len(axes) > 1 else (axes[0] if axes else None)
+    entry = sh.slot_shard_entry(mesh)
 
     def place(a):
         if a.ndim <= 1 or entry is None:
@@ -269,7 +327,37 @@ def shard_slots(caches, mesh):
             )
         return jax.device_put(a, NamedSharding(mesh, PS(None, entry)))
 
-    return jax.tree.map(place, caches)
+    def place_paged(node):
+        n_pages = node.k_pages.shape[1]
+        B = node.block_table.shape[1]
+        if B % dp:
+            raise ValueError(
+                f"serving a paged cache on a data-parallel mesh needs "
+                f"max_slots divisible by the DP degree {dp} (each replica "
+                f"shard owns max_slots/{dp} contiguous slots); got "
+                f"max_slots={B}")
+        if n_pages % dp:
+            raise ValueError(
+                f"paged pools shard per replica: the pool's {n_pages} "
+                f"pages must divide by the DP degree {dp} so every "
+                f"replica gets an equal page budget — raise pool_tokens "
+                f"(or pick page_size/max_slots) so pages % {dp} == 0")
+
+        def resh(a):
+            return a.reshape(a.shape[0], dp, a.shape[1] // dp, *a.shape[2:])
+
+        placed = {f: place(resh(getattr(node, f)))
+                  for f in _pool_fields(node)}
+        node = node._replace(**placed)
+        repl = lambda a: jax.device_put(a, sh.replicated(mesh))
+        if isinstance(node, SVDPagedKVCache):
+            node = node._replace(k_basis=repl(node.k_basis),
+                                 v_basis=repl(node.v_basis))
+        return node._replace(ring=repl(node.ring))
+
+    return [[place_paged(n) if isinstance(n, PAGED_CACHE_TYPES)
+             else jax.tree.map(place, n) for n in stage]
+            for stage in caches]
 
 
 def _top_eig_basis(w_heads, r: int):

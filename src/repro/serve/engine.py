@@ -1,14 +1,29 @@
 """Continuous-batching serving engine over the Pallas attention path.
 
-The engine owns ``max_slots`` fixed batch slots. A request's lifecycle:
+The engine is built JetStream-shaped: three explicit stages —
+
+  prefill(params, request)            -> Prefix
+  insert(prefix, decode_state, slot)  -> DecodeState
+  generate(params, decode_state)      -> (DecodeState, GenerateOutput)
+
+— with the classic ``submit``/``step`` continuous-batching loop rebuilt
+as a thin orchestrator on top (admission = prefill + insert; the fused
+decode block = generate; per-request bookkeeping stays host-side in the
+orchestrator). A :class:`Prefix` is the transferable product of prefill:
+the batch-1 cache tree plus the first sampled token and the request's
+sampling state — ``to_host()`` converts its device leaves to numpy so a
+router can hand it from a prefill engine to a different decode replica
+(serve/router.py fronts N of them).
+
+A request's lifecycle through the orchestrator:
 
   QUEUED   -> in the FIFO admission queue
   PREFILL  -> admitted to a free slot: the prompt runs alone (batch 1)
               through ``models.prefill`` — attention via the Pallas
               FlashAttention kernel on TPU (``RunConfig.attn_kernel``) —
-              and the resulting caches are spliced into the slot
-              (serve/cache.py). The first token is sampled from the
-              prefill logits.
+              producing a Prefix; ``insert`` splices its caches into the
+              slot (serve/cache.py). The first token was sampled from
+              the prefill logits.
   DECODE   -> the slot joins the fused decode loop: ``decode_block``
               tokens per jitted ``lax.scan`` call over the whole batch,
               single-query flash attention against the slot caches
@@ -32,7 +47,7 @@ over decode steps never re-enters Python, and the engine only pays the
 Cache layouts (``cache_layout=dense|paged``): ``dense`` reserves a
 slot-contiguous ``(layers, B, max_len, KV, dh)`` slab per slot — a short
 prompt pays for ``max_len`` whether it uses it or not. ``paged`` backs
-the self-attention caches with global page pools + per-slot block tables
+the self-attention caches with page pools + per-slot block tables
 (serve/paging.py, models/attention.PagedKVCache): admission reserves
 ``ceil((prompt + max_new) / page_size)`` pages per pool, the predicate
 becomes *free slot AND enough free pages in every pool*, and eviction
@@ -41,20 +56,29 @@ parked-position trick — no live block table maps a freed page, and
 ``page_pos`` resets when the page is re-issued). Both layouts are
 token-identical (tests/test_paging.py pins paged == dense == solo).
 
+On a mesh, the paged pools shard PER REPLICA: serve/cache.shard_slots
+reshapes every pool into ``dp`` equal shards (shard-local page ids,
+slot chunk [s*B/dp, (s+1)*B/dp) per shard), the engine keeps one
+PageAllocator per pool PER SHARD, and admission becomes page-aware
+replica placement — a free slot on a replica whose every pool has room.
+Decode stays shard-local (kernels/flash_decode sharded dispatchers), so
+tokens match the single-host engine exactly (tests/test_multidevice.py).
+
 Prompt-length bucketing: admission pads prompts up to a power-of-two
 bucket so ``prefill`` compiles once per bucket instead of once per
 distinct prompt length. Pad rows are masked out of the cache splice and
 the first-token logits are read at the true last-prompt position.
-Bucketing auto-disables for archs with sequence-coupled prefill state
-(rec/ssm recurrences, MoE capacity), where extra pad tokens would
-perturb the spliced state.
+Bucketing auto-disables (with a one-time warning naming the arch) for
+archs with sequence-coupled prefill state (rec/ssm recurrences, MoE
+capacity), where extra pad tokens would perturb the spliced state.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Optional, Sequence
+import warnings
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +93,10 @@ from repro.serve import paging
 from repro.serve.sampling import SamplingParams, sample_tokens
 
 PAD_TOKEN = -1
+
+# archs already warned about prefill-bucket auto-disable (one warning per
+# arch per process, not one per engine — engines churn in tests/benches)
+_BUCKET_WARNED: set[str] = set()
 
 
 @dataclasses.dataclass
@@ -100,6 +128,99 @@ class RequestOutput:
         excluded from decode_s, so it is excluded from the count too."""
         n = len(self.tokens) - 1
         return n / self.decode_s if self.decode_s > 0 and n > 0 else 0.0
+
+
+@dataclasses.dataclass
+class Prefix:
+    """The transferable product of the prefill stage (JetStream shape).
+
+    Holds everything ``insert`` needs to light up a decode slot: the
+    batch-1 prefill cache tree, the first sampled token, and the request
+    (sampling params ride with it). ``caches`` leaves live on the prefill
+    engine's devices; :meth:`to_host` converts them to numpy so the
+    Prefix can cross an engine boundary (router prefill->decode handoff —
+    in a multi-host deployment this is the wire format).
+
+    A Prefix is single-use: ``insert`` marks it consumed, and a second
+    insert raises with the target slot's lifecycle state (stale-handoff
+    bugs fail loudly instead of silently double-serving a request).
+    """
+
+    uid: int
+    request: Request
+    prompt_len: int
+    first_token: int
+    caches: Any                  # batch-1 cache tree (device or numpy)
+    prefill_s: float
+    consumed: bool = False
+    inserted_slot: int | None = None
+
+    def to_host(self) -> "Prefix":
+        """Convert cache leaves to numpy in place (transferable form)."""
+        self.caches = jax.tree.map(np.asarray, self.caches)
+        return self
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Per-slot decode state: the batched cache tree plus the host-side
+    slot vectors the fused loop carries. ``insert`` writes one slot;
+    ``generate`` advances every active slot one decode block."""
+
+    caches: Any
+    slot_uid: np.ndarray      # (B,) int64 request uid; -1 = free
+    tok: np.ndarray           # (B,) int32 last sampled token
+    pos: np.ndarray           # (B,) int32 next decode position; -1 parked
+    remaining: np.ndarray     # (B,) int32 generation budget left
+    gen_idx: np.ndarray       # (B,) int32 per-request sample index
+    active: np.ndarray        # (B,) bool
+    seeds: np.ndarray         # (B,) int32 sampling
+    temps: np.ndarray         # (B,) float32
+    topks: np.ndarray         # (B,) int32
+    eos_ids: np.ndarray       # (B,) int32; -1 = no eos stop
+
+    @classmethod
+    def init(cls, caches, B: int) -> "DecodeState":
+        return cls(
+            caches=caches,
+            slot_uid=np.full((B,), -1, np.int64),
+            tok=np.zeros((B,), np.int32),
+            pos=np.full((B,), -1, np.int32),
+            remaining=np.zeros((B,), np.int32),
+            gen_idx=np.zeros((B,), np.int32),
+            active=np.zeros((B,), bool),
+            seeds=np.zeros((B,), np.int32),
+            temps=np.zeros((B,), np.float32),
+            topks=np.zeros((B,), np.int32),
+            eos_ids=np.full((B,), -1, np.int32),
+        )
+
+    def slot_state(self, slot: int) -> str:
+        """Human-readable lifecycle state of a slot (error messages)."""
+        uid = int(self.slot_uid[slot])
+        if uid >= 0:
+            return (f"active (serving request uid={uid}, "
+                    f"pos={int(self.pos[slot])}, "
+                    f"{int(self.remaining[slot])} tokens remaining)")
+        return "free (released; position parked at -1)"
+
+
+@dataclasses.dataclass
+class GenerateOutput:
+    """Raw product of one fused decode block (orchestrator bookkeeping
+    input): per-step emitted tokens and activity masks, host-side."""
+
+    emitted: np.ndarray       # (steps, B) int32; PAD_TOKEN where inactive
+    was_active: np.ndarray    # (steps, B) bool
+    steps: int
+    seconds: float
+
+
+def _state_prop(name: str):
+    """Engine attribute delegating to decode_state (the pre-stage-API
+    attribute surface — tests and tools read eng.active / eng.caches)."""
+    return property(lambda self: getattr(self.decode_state, name),
+                    lambda self, v: setattr(self.decode_state, name, v))
 
 
 class ServeEngine:
@@ -134,10 +255,6 @@ class ServeEngine:
                 f"cache_compress={spec!r} compresses the paged page pools; "
                 "the dense layout has no compressed storage path — pass "
                 "cache_layout='paged' or drop cache_compress")
-        if mesh is not None and self.cache_layout == "paged":
-            raise NotImplementedError(
-                "paged serving is single-host: the page pool has no slot "
-                "axis to shard — use cache_layout='dense' on a mesh")
         if pool_tokens is not None and self.cache_layout != "paged":
             raise ValueError(
                 "pool_tokens budgets the paged layout's page pools; the "
@@ -151,24 +268,44 @@ class ServeEngine:
 
         # n_kv_eff: KV heads replicated for TP divisibility — the slot
         # caches must match the params' KV dim or write_slot's splice fails
-        self.caches = init_caches(cfg, rcfg, max_slots, max_len,
-                                  n_kv_eff=n_kv_eff,
-                                  layout=self.cache_layout,
-                                  page_size=self.page_size,
-                                  pool_pages=pool_pages,
-                                  cache_plan=self.cache_plan)
+        caches = init_caches(cfg, rcfg, max_slots, max_len,
+                             n_kv_eff=n_kv_eff,
+                             layout=self.cache_layout,
+                             page_size=self.page_size,
+                             pool_pages=pool_pages,
+                             cache_plan=self.cache_plan)
         if any(isinstance(n, SVDPagedKVCache)
-               for n in cache_lib.kv_cache_nodes(self.caches)):
+               for n in cache_lib.kv_cache_nodes(caches)):
             # calibration-free bases from the K/V projection spectra
-            self.caches = cache_lib.install_svd_bases(self.caches, params,
-                                                      cfg)
-        # one host-side allocator per page pool, in cache-tree order (the
-        # same traversal _alloc_rows uses); dense layout has none and
+            caches = cache_lib.install_svd_bases(caches, params, cfg)
+
+        if mesh is not None:
+            # Data-parallel decode: params replicated, per-sequence state
+            # sharded over the data axes — dense slot slabs split on the
+            # slot axis; paged pools split into per-replica shards with
+            # shard-local page ids (serve/cache.shard_slots). The jitted
+            # decode loop partitions shard-locally and tokens come out
+            # identical to the single-device engine
+            # (tests/test_multidevice.py holds it to that).
+            from repro.runtime import sharding as rt_sh
+
+            params = jax.device_put(params, rt_sh.replicated(mesh))
+            caches = cache_lib.shard_slots(caches, mesh)
+            self.n_replicas = (rt_sh.dp_degree(mesh)
+                               if self.cache_layout == "paged" else 1)
+        else:
+            self.n_replicas = 1
+        self.params = params
+        self.decode_state = DecodeState.init(caches, max_slots)
+
+        # one host-side allocator per page pool PER REPLICA SHARD, in
+        # cache-tree order (the same traversal _alloc_rows uses) —
+        # single-host engines have exactly one shard, so self.allocators
+        # is one-per-pool there, as before. Dense layout has none and
         # admission degenerates to the free-slot check. pool_labels /
-        # pool_formats parallel the allocator list (submit errors, stats).
-        self.allocators = []
-        self.pool_labels: list[str] = []
-        self.pool_formats: list[str] = []
+        # pool_formats parallel the flat allocator list (submit errors,
+        # stats).
+        pool_specs: list[tuple] = []   # (spec, label, fmt) per pool
         dense_itemsize = jnp.dtype(rcfg.compute_dtype).itemsize
         comp_bytes = dense_bytes = 0
         for si, ((unit, _rep), stage) in enumerate(zip(cfg.stages,
@@ -177,16 +314,31 @@ class ServeEngine:
                 if not isinstance(node, PAGED_CACHE_TYPES):
                     continue
                 tb = cache_lib.kv_token_bytes(node)
-                layers, kv = node.k_pages.shape[0], node.k_pages.shape[3]
+                layers = node.k_pages.shape[0]
+                kv = node.k_pages.shape[-2]
                 dense_tb = 2 * layers * kv * cfg.head_dim * dense_itemsize
                 comp_bytes += tb
                 dense_bytes += dense_tb
                 fmt = self.cache_plan.cache_format(si, kind)
-                self.allocators.append(paging.PageAllocator(
-                    paging.spec_from_cache(node, tb)))
-                self.pool_labels.append(f"stage{si}.{kind}")
-                self.pool_formats.append(str(fmt) if fmt else
-                                         str(jnp.dtype(rcfg.compute_dtype)))
+                pool_specs.append((
+                    paging.spec_from_cache(node, tb),
+                    f"stage{si}.{kind}",
+                    str(fmt) if fmt else str(jnp.dtype(rcfg.compute_dtype)),
+                ))
+        self.replica_allocators = [
+            [paging.PageAllocator(spec) for spec, _, _ in pool_specs]
+            for _ in range(self.n_replicas if pool_specs else 1)
+        ]
+        self.allocators = [a for shard in self.replica_allocators
+                           for a in shard]
+        self.pool_labels: list[str] = []
+        self.pool_formats: list[str] = []
+        for rep in range(len(self.replica_allocators)):
+            for _, label, fmt in pool_specs:
+                self.pool_labels.append(
+                    f"replica{rep}/{label}" if self.n_replicas > 1
+                    else label)
+                self.pool_formats.append(fmt)
         # bytes/token ratio vs an uncompressed pool set (1.0 when dense
         # or uncompressed paged) — the headline admission multiplier
         self.kv_compression_x = (dense_bytes / comp_bytes
@@ -195,8 +347,8 @@ class ServeEngine:
         for node in cache_lib.kv_cache_nodes(self.caches):
             tb = cache_lib.kv_token_bytes(node)
             if isinstance(node, PAGED_CACHE_TYPES):
-                self._kv_capacity_bytes += node.k_pages.shape[1] * \
-                    node.k_pages.shape[2] * tb
+                pages, ps = cache_lib.pool_geometry(node)
+                self._kv_capacity_bytes += pages * ps * tb
             else:
                 self._kv_capacity_bytes += node.k.shape[1] * \
                     node.k.shape[2] * tb
@@ -206,32 +358,22 @@ class ServeEngine:
         # expert capacity) — pad tokens there would change the spliced
         # state, not just dead cache rows
         kinds = {k for unit, _ in cfg.stages for k in unit}
-        bucketable = not (kinds & {"rec", "ssm", "moe"})
+        coupled = sorted(kinds & {"rec", "ssm", "moe"})
+        bucketable = not coupled
         self.prefill_buckets = (bucketable if prefill_buckets is None
                                 else prefill_buckets and bucketable)
+        if coupled and prefill_buckets is not False:
+            arch = getattr(cfg, "name", "+".join(coupled))
+            if arch not in _BUCKET_WARNED:
+                _BUCKET_WARNED.add(arch)
+                warnings.warn(
+                    f"prefill buckets auto-disabled for arch {arch!r}: "
+                    f"its {'/'.join(coupled)} blocks carry sequence-"
+                    "coupled prefill state, so pad tokens would perturb "
+                    "the spliced caches — every distinct prompt length "
+                    "compiles its own prefill (engine stats() reports "
+                    "buckets_enabled=False)", stacklevel=2)
         self.bucket_lens: set[int] = set()
-        if mesh is not None:
-            # Data-parallel decode: params replicated, the slot axis of the
-            # batched cache sharded over the data axes. The jitted decode
-            # loop then partitions every per-slot tensor the same way and
-            # tokens come out identical to the single-device engine
-            # (tests/test_multidevice.py holds it to that).
-            from repro.runtime import sharding as rt_sh
-
-            params = jax.device_put(params, rt_sh.replicated(mesh))
-            self.caches = cache_lib.shard_slots(self.caches, mesh)
-        self.params = params
-        B = max_slots
-        self.slot_uid = np.full((B,), -1, np.int64)
-        self.tok = np.zeros((B,), np.int32)
-        self.pos = np.full((B,), -1, np.int32)
-        self.remaining = np.zeros((B,), np.int32)
-        self.gen_idx = np.zeros((B,), np.int32)
-        self.active = np.zeros((B,), bool)
-        self.seeds = np.zeros((B,), np.int32)
-        self.temps = np.zeros((B,), np.float32)
-        self.topks = np.zeros((B,), np.int32)
-        self.eos_ids = np.full((B,), -1, np.int32)
 
         self.queue: collections.deque[Request] = collections.deque()
         self._outputs: dict[int, list[int]] = {}
@@ -242,6 +384,8 @@ class ServeEngine:
         # aggregate stats
         self.prefill_tokens = 0
         self.prefill_time = 0.0
+        self.insert_count = 0
+        self.insert_time = 0.0
         self.decode_tokens = 0
         self.decode_time = 0.0
         # seconds per decode step; bounded ring so a long-lived engine
@@ -278,6 +422,19 @@ class ServeEngine:
         self._write_slot_paged = jax.jit(cache_lib.write_slot_paged,
                                          donate_argnums=donate0)
         self._sample_first = jax.jit(self._sample_first_impl)
+
+    # decode_state delegation: the pre-stage-API attribute surface
+    caches = _state_prop("caches")
+    slot_uid = _state_prop("slot_uid")
+    tok = _state_prop("tok")
+    pos = _state_prop("pos")
+    remaining = _state_prop("remaining")
+    gen_idx = _state_prop("gen_idx")
+    active = _state_prop("active")
+    seeds = _state_prop("seeds")
+    temps = _state_prop("temps")
+    topks = _state_prop("topks")
+    eos_ids = _state_prop("eos_ids")
 
     # ------------------------------------------------------------------
     # compiled pieces
@@ -327,9 +484,159 @@ class ServeEngine:
         return fn
 
     # ------------------------------------------------------------------
+    # stage API: prefill -> Prefix -> insert -> DecodeState -> generate
+    # ------------------------------------------------------------------
+    def prefill(self, params, request: Request) -> Prefix:
+        """Run the prompt alone (batch 1) and package the result as a
+        transferable :class:`Prefix` — the first token is sampled here
+        from the prefill logits, so a decode replica receiving the Prefix
+        never re-touches the prompt."""
+        lp = len(request.tokens)
+        lb = self._bucket_len(lp)
+        toks = np.zeros((lb,), np.int32)
+        toks[:lp] = np.asarray(request.tokens, np.int32)
+        batch = {"tokens": jnp.asarray(toks)[None]}
+        if self.cfg.vision_tokens:
+            batch["image_embeds"] = jnp.asarray(
+                request.image_embeds, jnp.float32)[None]
+        t0 = time.perf_counter()
+        logits, pcaches = self._prefill_fn(params, batch,
+                                           jnp.asarray([lp], jnp.int32))
+        self.bucket_lens.add(lb)
+        tok0 = self._sample_first(
+            logits[0, -1, : self.cfg.vocab_size],
+            jnp.int32(request.sampling.seed),
+            jnp.float32(request.sampling.temperature),
+            jnp.int32(request.sampling.top_k),
+        )
+        tok0 = int(tok0)
+        jax.block_until_ready(pcaches)
+        dt = time.perf_counter() - t0
+        self.prefill_tokens += lp
+        self.prefill_time += dt
+        return Prefix(uid=request.uid, request=request, prompt_len=lp,
+                      first_token=tok0, caches=pcaches, prefill_s=dt)
+
+    def insert(self, prefix: Prefix, decode_state: DecodeState,
+               slot: int) -> DecodeState:
+        """Splice a Prefix into decode slot ``slot``: reserve pages from
+        the slot's replica allocators (paged layout), install the caches,
+        and arm the slot's sampling/stop vectors. Mutates and returns
+        ``decode_state``.
+
+        Raises on lifecycle violations — a consumed (stale) Prefix, or a
+        slot that is not free — naming the slot's current state."""
+        if prefix.consumed:
+            raise ValueError(
+                f"stale Prefix (uid={prefix.uid}): already inserted into "
+                f"slot {prefix.inserted_slot}, which is now "
+                f"{decode_state.slot_state(prefix.inserted_slot)}. A "
+                "Prefix is single-use — re-run prefill to admit the "
+                "request again")
+        if decode_state.active[slot] or decode_state.slot_uid[slot] >= 0:
+            raise ValueError(
+                f"cannot insert Prefix (uid={prefix.uid}) into slot "
+                f"{slot}: slot is {decode_state.slot_state(slot)} — wait "
+                "for it to finish or place into a free slot")
+        req = prefix.request
+        lp = prefix.prompt_len
+        t0 = time.perf_counter()
+        pcaches = prefix.caches
+        if not isinstance(jax.tree.leaves(pcaches)[0], jax.Array):
+            # host-transferred Prefix (router handoff): re-device the tree
+            pcaches = jax.tree.map(jnp.asarray, pcaches)
+        if self.allocators:
+            rows = self._alloc_rows(req, slot)
+            decode_state.caches = self._write_slot_paged(
+                decode_state.caches, pcaches, rows, jnp.int32(slot),
+                jnp.int32(lp))
+        else:
+            decode_state.caches = self._write_slot(
+                decode_state.caches, pcaches, jnp.int32(slot),
+                jnp.int32(lp))
+        jax.block_until_ready(decode_state.caches)
+        self.insert_count += 1
+        self.insert_time += time.perf_counter() - t0
+
+        decode_state.slot_uid[slot] = req.uid
+        decode_state.tok[slot] = prefix.first_token
+        decode_state.pos[slot] = lp
+        decode_state.remaining[slot] = req.max_new_tokens - 1
+        decode_state.gen_idx[slot] = 1
+        decode_state.seeds[slot] = req.sampling.seed
+        decode_state.temps[slot] = req.sampling.temperature
+        decode_state.topks[slot] = req.sampling.top_k
+        decode_state.eos_ids[slot] = req.eos_id
+        eos_hit = req.eos_id >= 0 and prefix.first_token == req.eos_id
+        decode_state.active[slot] = (
+            decode_state.remaining[slot] > 0 and not eos_hit
+            and decode_state.pos[slot] < self.max_len - 1)
+        prefix.consumed = True
+        prefix.inserted_slot = slot
+        return decode_state
+
+    def generate(self, params, decode_state: DecodeState, *,
+                 steps: int | None = None
+                 ) -> tuple[DecodeState, GenerateOutput]:
+        """One fused decode block over every active slot: ``steps`` tokens
+        (default ``decode_block``, capped near the longest remaining
+        generation) in a single jitted lax.scan. Mutates and returns
+        ``decode_state`` plus the raw per-step emissions."""
+        steps = steps or self.decode_block
+        if not decode_state.active.any():
+            B = decode_state.active.shape[0]
+            return decode_state, GenerateOutput(
+                emitted=np.full((0, B), PAD_TOKEN, np.int32),
+                was_active=np.zeros((0, B), bool), steps=0, seconds=0.0)
+        # Don't scan far past the longest remaining generation (inert
+        # trailing iterations still run full decode steps over the batch),
+        # but round tails up to a power of two: each distinct scan length
+        # is a separate full-model compile, so an exact cap would pay
+        # seconds of compilation to save milliseconds of masked steps.
+        cap = max(1, int(decode_state.remaining[decode_state.active].max()))
+        if cap < steps:
+            steps = min(steps, 1 << (cap - 1).bit_length() if cap > 1 else 1)
+        fn = self._get_decode(steps)
+        t0 = time.perf_counter()
+        carry, (emitted, was_active) = fn(
+            params, decode_state.caches,
+            jnp.asarray(decode_state.tok), jnp.asarray(decode_state.pos),
+            jnp.asarray(decode_state.active),
+            jnp.asarray(decode_state.remaining),
+            jnp.asarray(decode_state.gen_idx),
+            jnp.asarray(decode_state.seeds),
+            jnp.asarray(decode_state.temps),
+            jnp.asarray(decode_state.topks),
+            jnp.asarray(decode_state.eos_ids),
+        )
+        (decode_state.caches, tok, pos, active, remaining, gen_idx) = carry
+        emitted = np.asarray(emitted)          # (steps, B)
+        was_active = np.asarray(was_active)    # (steps, B)
+        dt = time.perf_counter() - t0
+
+        n_emitted = int(was_active.sum())
+        n_steps_run = int(was_active.any(axis=1).sum())
+        self.decode_tokens += n_emitted
+        self.decode_time += dt
+        if n_steps_run:
+            self.latency_samples.extend([dt / n_steps_run] * n_steps_run)
+
+        # np.array (not asarray): device arrays view as read-only buffers
+        decode_state.tok = np.array(tok)
+        decode_state.pos = np.array(pos)
+        decode_state.remaining = np.array(remaining)
+        decode_state.gen_idx = np.array(gen_idx)
+        decode_state.active = np.array(active)
+        return decode_state, GenerateOutput(emitted=emitted,
+                                            was_active=was_active,
+                                            steps=steps, seconds=dt)
+
+    # ------------------------------------------------------------------
     # scheduling
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def _validate_request(self, req: Request) -> None:
+        """Raise if the request can NEVER be served by this engine (bad
+        sizes, or a per-replica pool it cannot fit in)."""
         lp = len(req.tokens)
         if lp < 1 or req.max_new_tokens < 1:
             raise ValueError(f"request {req.uid}: empty prompt or generation")
@@ -351,6 +658,9 @@ class ServeEngine:
                     f"{alloc.spec.n_pages} pages ({cap_tok} tokens) total "
                     f"— {total - cap_tok} tokens over capacity; raise "
                     f"pool_tokens or shrink prompt_len + max_new_tokens")
+
+    def submit(self, req: Request) -> None:
+        self._validate_request(req)
         self.queue.append(req)
 
     @property
@@ -359,6 +669,11 @@ class ServeEngine:
 
     def _free_slots(self) -> list[int]:
         return [int(i) for i in np.nonzero(~self.active)[0]]
+
+    def _slot_replica(self, slot: int) -> int:
+        """Replica shard owning ``slot`` (contiguous-chunk map; 0 when
+        single-host)."""
+        return slot // (self.max_slots // self.n_replicas)
 
     def _bucket_len(self, lp: int) -> int:
         """Pad target for a prompt of ``lp`` tokens: the next power of two
@@ -372,28 +687,68 @@ class ServeEngine:
         return min(b, self.max_len)
 
     def _can_admit(self, req: Request) -> bool:
-        """Paged admission predicate: enough free pages in EVERY pool for
-        the request's full reservation (prompt + worst-case generation —
-        a reserved request can always run to its stop condition; no
-        mid-stream preemption). Dense layout: a free slot is enough."""
+        """Paged admission predicate: SOME replica shard has enough free
+        pages in EVERY one of its pools for the request's full reservation
+        (prompt + worst-case generation — a reserved request can always
+        run to its stop condition; no mid-stream preemption). Dense
+        layout: a free slot is enough."""
         if not self.allocators:
             return True
         total = len(req.tokens) + req.max_new_tokens
-        return all(a.can_allocate(a.blocks_for(total))
+        return any(
+            all(a.can_allocate(a.blocks_for(total)) for a in pools)
+            for pools in self.replica_allocators)
+
+    def try_place(self, req: Request) -> int | None:
+        """Page-aware placement: the slot the request should be admitted
+        to, or None if nothing fits right now. Deterministic — among
+        replicas with a free slot AND page room in every pool, pick the
+        one with the most post-admission headroom in its tightest pool
+        (ties: lowest replica index), then its lowest free slot. A
+        single-host engine degenerates to first-free-slot + the pool
+        check, exactly the old behavior."""
+        free = self._free_slots()
+        if not free:
+            return None
+        if not self.allocators:
+            return free[0]
+        total = len(req.tokens) + req.max_new_tokens
+        best: tuple[int, int] | None = None
+        for rep, pools in enumerate(self.replica_allocators):
+            rep_free = [s for s in free if self._slot_replica(s) == rep]
+            if not rep_free:
+                continue
+            if not all(a.can_allocate(a.blocks_for(total)) for a in pools):
+                continue
+            headroom = min(a.free_pages - a.blocks_for(total)
+                           for a in pools)
+            if best is None or headroom > best[0]:
+                best = (headroom, rep_free[0])
+        return None if best is None else best[1]
+
+    def pool_load(self) -> float:
+        """Load factor in [0, 1] for router placement: the tightest
+        pool's reserved fraction across replica shards (paged), or the
+        occupied-slot fraction (dense)."""
+        if not self.allocators:
+            return float(self.active.sum()) / max(1, self.max_slots)
+        return max(a.reserved_pages / max(1, a.spec.n_pages)
                    for a in self.allocators)
 
     def _alloc_rows(self, req: Request, slot: int):
-        """Reserve pages in every pool; returns the block-table rows tree
-        (aligned with the cache tree: (nb,) row per paged node, None
+        """Reserve pages in every pool of the slot's replica shard;
+        returns the block-table rows tree (aligned with the cache tree:
+        a (nb,) row of shard-LOCAL page ids per paged node, None
         elsewhere) for write_slot_paged."""
         total = len(req.tokens) + req.max_new_tokens
+        pools = self.replica_allocators[self._slot_replica(slot)]
         ai = 0
         rows = []
         for stage in self.caches:
             rstage = []
             for node in stage:
                 if isinstance(node, PAGED_CACHE_TYPES):
-                    alloc = self.allocators[ai]
+                    alloc = pools[ai]
                     ai += 1
                     row = alloc.allocate(slot, alloc.blocks_for(total))
                     rstage.append(jnp.asarray(row))
@@ -403,54 +758,20 @@ class ServeEngine:
         return rows
 
     def _admit(self, req: Request, slot: int) -> Optional[RequestOutput]:
-        lp = len(req.tokens)
-        lb = self._bucket_len(lp)
-        toks = np.zeros((lb,), np.int32)
-        toks[:lp] = np.asarray(req.tokens, np.int32)
-        batch = {"tokens": jnp.asarray(toks)[None]}
-        if self.cfg.vision_tokens:
-            batch["image_embeds"] = jnp.asarray(
-                req.image_embeds, jnp.float32)[None]
-        t0 = time.perf_counter()
-        logits, pcaches = self._prefill_fn(self.params, batch,
-                                           jnp.asarray([lp], jnp.int32))
-        self.bucket_lens.add(lb)
-        tok0 = self._sample_first(
-            logits[0, -1, : self.cfg.vocab_size],
-            jnp.int32(req.sampling.seed),
-            jnp.float32(req.sampling.temperature),
-            jnp.int32(req.sampling.top_k),
-        )
-        if self.allocators:
-            rows = self._alloc_rows(req, slot)
-            self.caches = self._write_slot_paged(
-                self.caches, pcaches, rows, jnp.int32(slot), jnp.int32(lp))
-        else:
-            self.caches = self._write_slot(self.caches, pcaches,
-                                           jnp.int32(slot), jnp.int32(lp))
-        tok0 = int(tok0)
-        jax.block_until_ready(self.caches)
-        dt = time.perf_counter() - t0
-        self.prefill_tokens += lp
-        self.prefill_time += dt
+        """Orchestrated admission: prefill + insert + bookkeeping."""
+        return self.admit_prefix(self.prefill(self.params, req), slot)
 
+    def admit_prefix(self, prefix: Prefix,
+                     slot: int) -> Optional[RequestOutput]:
+        """Insert an (possibly handed-off) Prefix and register its request
+        with the orchestrator's output bookkeeping. Returns the finished
+        RequestOutput when the first token already hit a stop condition."""
+        self.decode_state = self.insert(prefix, self.decode_state, slot)
+        req = prefix.request
         self._requests[req.uid] = req
-        self._outputs[req.uid] = [tok0]
-        self._prefill_s[req.uid] = dt
+        self._outputs[req.uid] = [prefix.first_token]
+        self._prefill_s[req.uid] = prefix.prefill_s
         self._decode_acc[req.uid] = 0.0
-
-        self.slot_uid[slot] = req.uid
-        self.tok[slot] = tok0
-        self.pos[slot] = lp
-        self.remaining[slot] = req.max_new_tokens - 1
-        self.gen_idx[slot] = 1
-        self.seeds[slot] = req.sampling.seed
-        self.temps[slot] = req.sampling.temperature
-        self.topks[slot] = req.sampling.top_k
-        self.eos_ids[slot] = req.eos_id
-        eos_hit = req.eos_id >= 0 and tok0 == req.eos_id
-        self.active[slot] = (self.remaining[slot] > 0 and not eos_hit
-                             and self.pos[slot] < self.max_len - 1)
         if not self.active[slot]:
             return self._finish(slot)
         return None
@@ -472,8 +793,10 @@ class ServeEngine:
         self.slot_uid[slot] = -1
         self.active[slot] = False
         self.pos[slot] = -1
-        # paged reclamation: pages go back to the free list host-side; the
-        # device cache is untouched (no live block table maps them)
+        # paged reclamation: pages go back to the host free list; the
+        # device cache is untouched (no live block table maps them). Only
+        # the slot's own replica shard ever allocated for it — release on
+        # the others is a no-op.
         for alloc in self.allocators:
             alloc.release(slot)
         # reset sampling state: a stale temperature > 0 on a free slot
@@ -485,19 +808,18 @@ class ServeEngine:
         return out
 
     # ------------------------------------------------------------------
-    # engine loop
+    # engine loop (thin orchestrator over the stage API)
     # ------------------------------------------------------------------
     def step(self, *, decode_steps: int | None = None) -> list[RequestOutput]:
         """Admit what fits, then run one fused decode block. Returns the
         requests that finished during this step."""
         finished: list[RequestOutput] = []
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            if not self._can_admit(self.queue[0]):
-                # strict FIFO: when the head can't get pages, later (maybe
-                # smaller) requests wait too — admission order, and hence
-                # every token stream, stays deterministic
+        while self.queue:
+            slot = self.try_place(self.queue[0])
+            if slot is None:
+                # strict FIFO: when the head can't get a slot + pages,
+                # later (maybe smaller) requests wait too — admission
+                # order, and hence every token stream, stays deterministic
                 break
             done = self._admit(self.queue.popleft(), slot)
             if done is not None:
@@ -511,44 +833,9 @@ class ServeEngine:
         if not self.active.any():
             return finished
 
-        steps = decode_steps or self.decode_block
-        # Don't scan far past the longest remaining generation (inert
-        # trailing iterations still run full decode steps over the batch),
-        # but round tails up to a power of two: each distinct scan length
-        # is a separate full-model compile, so an exact cap would pay
-        # seconds of compilation to save milliseconds of masked steps.
-        cap = max(1, int(self.remaining[self.active].max()))
-        if cap < steps:
-            steps = min(steps, 1 << (cap - 1).bit_length() if cap > 1 else 1)
-        fn = self._get_decode(steps)
-        t0 = time.perf_counter()
-        carry, (emitted, was_active) = fn(
-            self.params, self.caches,
-            jnp.asarray(self.tok), jnp.asarray(self.pos),
-            jnp.asarray(self.active), jnp.asarray(self.remaining),
-            jnp.asarray(self.gen_idx), jnp.asarray(self.seeds),
-            jnp.asarray(self.temps), jnp.asarray(self.topks),
-            jnp.asarray(self.eos_ids),
-        )
-        (self.caches, tok, pos, active, remaining, gen_idx) = carry
-        emitted = np.asarray(emitted)          # (steps, B)
-        was_active = np.asarray(was_active)    # (steps, B)
-        dt = time.perf_counter() - t0
-
-        n_emitted = int(was_active.sum())
-        n_steps_run = int(was_active.any(axis=1).sum())
-        self.decode_tokens += n_emitted
-        self.decode_time += dt
-        if n_steps_run:
-            self.latency_samples.extend([dt / n_steps_run] * n_steps_run)
-
-        # np.array (not asarray): device arrays view as read-only buffers
-        self.tok = np.array(tok)
-        self.pos = np.array(pos)
-        self.remaining = np.array(remaining)
-        self.gen_idx = np.array(gen_idx)
-        prev_active = self.active
-        self.active = np.array(active)
+        prev_active = self.active.copy()
+        self.decode_state, out = self.generate(
+            self.params, self.decode_state, steps=decode_steps)
 
         # used peaks AFTER the decode block lands (positions advanced,
         # slots not yet released) — the admission-time sample above only
@@ -560,11 +847,11 @@ class ServeEngine:
             uid = int(self.slot_uid[b])
             if uid < 0:
                 continue
-            if was_active[:, b].any():
-                self._decode_acc[uid] += dt
-            for t in range(steps):
-                if was_active[t, b]:
-                    self._outputs[uid].append(int(emitted[t, b]))
+            if out.was_active[:, b].any():
+                self._decode_acc[uid] += out.seconds
+            for t in range(out.steps):
+                if out.was_active[t, b]:
+                    self._outputs[uid].append(int(out.emitted[t, b]))
             if prev_active[b] and not self.active[b]:
                 finished.append(self._finish(b))
         return finished
@@ -587,6 +874,8 @@ class ServeEngine:
         compiled functions and slot state are kept."""
         self.prefill_tokens = 0
         self.prefill_time = 0.0
+        self.insert_count = 0
+        self.insert_time = 0.0
         self.decode_tokens = 0
         self.decode_time = 0.0
         self.latency_samples.clear()
@@ -610,8 +899,10 @@ class ServeEngine:
                 pages_total += alloc.spec.n_pages
                 pages_free += alloc.free_pages
                 reserved += alloc.reserved_bytes
+                # per-replica allocators own only their shard's slots
                 used += alloc.spec.token_bytes * sum(
-                    alloc.used_tokens(int(self.pos[s])) for s in occupied)
+                    alloc.used_tokens(int(self.pos[s])) for s in occupied
+                    if alloc.owns(int(s)))
         else:
             for node in cache_lib.kv_cache_nodes(self.caches):
                 S = node.k.shape[2]
@@ -643,6 +934,10 @@ class ServeEngine:
             "prefill_s": self.prefill_time,
             "prefill_tok_s": (self.prefill_tokens / self.prefill_time
                               if self.prefill_time else 0.0),
+            "insert_count": self.insert_count,
+            "insert_s": self.insert_time,
+            "insert_ms_avg": (1e3 * self.insert_time / self.insert_count
+                              if self.insert_count else 0.0),
             "decode_tokens": self.decode_tokens,
             "decode_s": self.decode_time,
             "decode_tok_s": (self.decode_tokens / self.decode_time
@@ -651,6 +946,8 @@ class ServeEngine:
             "p95_token_latency_ms": pct(0.95) * 1e3,
             "cache_slot_bytes": cache_lib.slot_bytes(self.caches, self.max_slots),
             "prefill_compiles": len(self.bucket_lens),
+            "buckets_enabled": self.prefill_buckets,
+            "replica_shards": self.n_replicas,
             "peak_active": self.peak_active,
             "peak_kv_reserved_bytes": self.peak_reserved_bytes,
             "peak_kv_used_bytes": self.peak_used_bytes,

@@ -49,9 +49,22 @@ class PoolSpec:
 
 
 def spec_from_cache(node, token_bytes: int) -> PoolSpec:
-    """PoolSpec for a layer-stacked ``PagedKVCache`` node. ``token_bytes``
-    comes from the caller (serve/cache.kv_token_bytes — one formula for
-    allocator and engine accounting, and this module stays numpy-only)."""
+    """PoolSpec for a layer-stacked paged node. ``token_bytes`` comes from
+    the caller (serve/cache.kv_token_bytes — one formula for allocator and
+    engine accounting, and this module stays numpy-only).
+
+    Mesh-sharded nodes (block_table (layers, dp, B/dp, nb); pools with a
+    shard axis at position 1) yield the PER-SHARD spec — n_pages is one
+    replica's page budget, matching the one-allocator-per-pool-per-shard
+    accounting the engine keeps, and page ids stay shard-local."""
+    if node.block_table.ndim == 4:        # sharded: (layers, dp, B/dp, nb)
+        return PoolSpec(
+            page_size=node.k_pages.shape[3],
+            n_pages=node.k_pages.shape[2],
+            blocks_per_slot=node.block_table.shape[3],
+            ring=bool(np.asarray(node.ring)[0]),
+            token_bytes=token_bytes,
+        )
     return PoolSpec(
         page_size=node.k_pages.shape[2],
         n_pages=node.k_pages.shape[1],
@@ -133,6 +146,11 @@ class PageAllocator:
         self._owned[slot] = row
         self.total_page_allocations += n_blocks
         return row
+
+    def owns(self, slot: int) -> bool:
+        """Whether ``slot`` currently holds pages from this pool (per-shard
+        allocators own only their replica's slots)."""
+        return slot in self._owned
 
     def owned_row(self, slot: int):
         """The slot's current block-table row, or None (inspection)."""

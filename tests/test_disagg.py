@@ -1,0 +1,260 @@
+"""Disaggregated serving: the prefill/insert/generate stage API and the
+multi-replica Router (DESIGN.md §9).
+
+Pins the tentpole invariants:
+  * the stages composed BY HAND emit byte-identical tokens to the
+    submit/step orchestrator, for every cache layout (dense, paged,
+    int8-quantized, svd low-rank);
+  * a Router over N replicas reproduces the solo engine's per-request
+    token streams, including through a dedicated prefill engine whose
+    Prefix crosses the engine boundary in host (numpy) form;
+  * lifecycle violations (stale Prefix, occupied slot, impossible pin)
+    raise actionable errors naming the state involved.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config
+from repro.models import init_model
+from repro.serve import Request, Router, ServeEngine
+from repro.serve import engine as engine_mod
+
+RCFG = RunConfig(compute_dtype="float32", param_dtype="float32",
+                 policy_name="none")
+
+LAYOUTS = {
+    "dense": dict(),
+    "paged": dict(cache_layout="paged", page_size=8),
+    "int8": dict(cache_layout="paged", page_size=8, cache_compress="int8"),
+    "svd": dict(cache_layout="paged", page_size=8,
+                cache_compress="svd(r=1/2)"),
+}
+
+
+def _setup():
+    cfg = get_config("internlm2-1.8b_smoke")
+    params, _ = init_model(cfg, RCFG, jax.random.key(0))
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(1, cfg.vocab_size, size=n)]
+            for n in lengths]
+
+
+def _requests(cfg, seed=0, n=3, max_new=6):
+    prompts = _prompts(cfg, [10, 7, 9][:n], seed=seed)
+    return [Request(uid=i, tokens=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _drained(eng):
+    for alloc in eng.allocators:
+        alloc.check_invariant()
+        assert alloc.free_pages == alloc.spec.n_pages
+
+
+# ---------------------------------------------------------------------------
+# stage API == orchestrator
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", list(LAYOUTS))
+def test_manual_stages_match_submit_step(layout):
+    """prefill + insert + generate composed by hand == submit/step, for
+    every cache layout."""
+    cfg, params = _setup()
+    kw = dict(max_slots=2, max_len=64, decode_block=4, **LAYOUTS[layout])
+    base = ServeEngine(cfg, RCFG, params, **kw).run(_requests(cfg))
+    eng = ServeEngine(cfg, RCFG, params, **kw)
+    outs = {}
+    for req in _requests(cfg):
+        prefix = eng.prefill(eng.params, req)
+        toks = [prefix.first_token]
+        state = eng.insert(prefix, eng.decode_state, slot=0)
+        while state.active[0]:
+            state, out = eng.generate(eng.params, state)
+            toks.extend(int(t) for t in out.emitted[:, 0]
+                        if t != engine_mod.PAD_TOKEN)
+        for alloc in eng.allocators:   # hand-run: release slot 0 ourselves
+            alloc.release(0)
+        state.slot_uid[0] = -1
+        state.pos[0] = -1
+        outs[req.uid] = toks
+    for uid, o in base.items():
+        assert outs[uid] == o.tokens, f"layout={layout} uid={uid}"
+    _drained(eng)
+
+
+def test_generate_on_idle_state_is_noop():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=32)
+    state, out = eng.generate(eng.params, eng.decode_state)
+    assert out.steps == 0 and out.emitted.shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle errors
+# ---------------------------------------------------------------------------
+def test_stale_prefix_insert_raises_with_lifecycle_state():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=64,
+                      cache_layout="paged", page_size=8)
+    [req] = _requests(cfg, n=1)
+    prefix = eng.prefill(eng.params, req)
+    assert eng.admit_prefix(prefix, slot=0) is None
+    # re-inserting the consumed Prefix while its slot is live
+    with pytest.raises(ValueError) as ei:
+        eng.insert(prefix, eng.decode_state, slot=1)
+    msg = str(ei.value)
+    assert "stale Prefix" in msg
+    assert f"uid={req.uid}" in msg
+    assert "slot 0" in msg and "active" in msg      # where it went, state
+    # drain; the released slot's lifecycle state shows up too
+    while eng.has_work:
+        eng.step()
+    with pytest.raises(ValueError, match="free \\(released"):
+        eng.insert(prefix, eng.decode_state, slot=1)
+    _drained(eng)
+
+
+def test_insert_into_occupied_slot_raises():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=64)
+    r0, r1 = _requests(cfg, n=2)
+    eng.admit_prefix(eng.prefill(eng.params, r0), slot=0)
+    p1 = eng.prefill(eng.params, r1)
+    with pytest.raises(ValueError) as ei:
+        eng.insert(p1, eng.decode_state, slot=0)
+    msg = str(ei.value)
+    assert "slot 0" in msg
+    assert f"uid={r0.uid}" in msg and "active" in msg
+    assert not p1.consumed                 # failed insert leaves it usable
+    eng.insert(p1, eng.decode_state, slot=1)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+def _mk_replicas(cfg, params, n, **kw):
+    return [ServeEngine(cfg, RCFG, params, **kw) for _ in range(n)]
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_routed_replicas_match_solo(layout):
+    """Router over 2 replicas reproduces the solo single-host engine's
+    per-request token streams."""
+    cfg, params = _setup()
+    kw = dict(max_slots=2, max_len=64, decode_block=4, **LAYOUTS[layout])
+    solo = ServeEngine(cfg, RCFG, params, **kw).run(_requests(cfg))
+    router = Router(_mk_replicas(cfg, params, 2, **kw))
+    routed = router.run(_requests(cfg))
+    for uid, o in solo.items():
+        assert routed[uid].tokens == o.tokens
+    st = router.stats()
+    assert st["replicas"] == 2
+    assert st["decode_tokens"] > 0
+    assert len(set(router.placement.values())) >= 1
+
+
+def test_router_dedicated_prefill_host_handoff():
+    """A dedicated prefill engine hands Prefixes to decode replicas in
+    host (numpy) form; tokens still match the solo engine."""
+    cfg, params = _setup()
+    kw = dict(max_slots=2, max_len=64, decode_block=4,
+              cache_layout="paged", page_size=8)
+    solo = ServeEngine(cfg, RCFG, params, **kw).run(_requests(cfg))
+    pf = ServeEngine(cfg, RCFG, params, max_slots=1, max_len=64,
+                     cache_layout="paged", page_size=8)
+    router = Router(_mk_replicas(cfg, params, 2, **kw), prefill_engine=pf)
+    routed = router.run(_requests(cfg))
+    for uid, o in solo.items():
+        assert routed[uid].tokens == o.tokens
+    st = router.stats()
+    assert st["dedicated_prefill"]
+    assert st["prefill_tokens"] == sum(len(r.tokens)
+                                       for r in _requests(cfg))
+    # decode replicas never ran a prefill of their own
+    assert all(s["prefill_tokens"] == 0 for s in st["per_replica"])
+
+
+def test_router_page_aware_admission_spreads_load():
+    """With per-replica pools sized for ~one request each, the router
+    serves 2 requests concurrently across 2 replicas — aggregate
+    concurrency scales with replica count at fixed per-replica budget."""
+    cfg, params = _setup()
+    kw = dict(max_slots=2, max_len=64, decode_block=4, cache_layout="paged",
+              page_size=8, pool_tokens=16)   # 2 pages = one 10+6 request
+    reqs = _requests(cfg, max_new=6)
+    solo_eng = ServeEngine(cfg, RCFG, params, **kw)
+    solo = solo_eng.run(reqs)
+    assert solo_eng.peak_active == 1          # pool admits one at a time
+    router = Router(_mk_replicas(cfg, params, 2, **kw))
+    routed = router.run(_requests(cfg, max_new=6))
+    for uid, o in solo.items():
+        assert routed[uid].tokens == o.tokens
+    assert router.peak_active == 2            # both replicas served at once
+    assert len(set(router.placement.values())) == 2
+
+
+def test_router_pinned_full_replica_rejection_is_actionable():
+    cfg, params = _setup()
+    kw = dict(max_slots=2, max_len=64, cache_layout="paged",
+              page_size=8)
+    small = ServeEngine(cfg, RCFG, params, pool_tokens=16, **kw)
+    big = ServeEngine(cfg, RCFG, params, pool_tokens=64, **kw)
+    router = Router([small, big])
+    req = Request(uid=9, tokens=list(range(1, 21)), max_new_tokens=10)
+    with pytest.raises(ValueError) as ei:
+        router.submit(req, replica=0)
+    msg = str(ei.value)
+    assert "request 9" in msg
+    assert "pinned to replica 0" in msg        # which replica
+    assert "pages short" in msg                # the pool deficit
+    assert "replica 1" in msg and "least loaded" in msg  # the alternative
+    assert "drop the pin or raise pool_tokens" in msg    # the remedy
+    router.submit(req, replica=1)              # the alternative really fits
+    out = router.run([])
+    assert len(out[9].tokens) == 10
+
+
+def test_router_rejects_out_of_range_pin():
+    cfg, params = _setup()
+    router = Router([ServeEngine(cfg, RCFG, params, max_slots=1,
+                                 max_len=32)])
+    with pytest.raises(ValueError, match="out of range"):
+        router.submit(Request(uid=0, tokens=[1, 2], max_new_tokens=2),
+                      replica=1)
+
+
+# ---------------------------------------------------------------------------
+# prefill-bucket auto-disable telemetry
+# ---------------------------------------------------------------------------
+def test_bucket_autodisable_warns_once_naming_arch():
+    cfg = get_config("recurrentgemma-9b_smoke")
+    params, _ = init_model(cfg, RCFG, jax.random.key(0))
+    engine_mod._BUCKET_WARNED.clear()
+    with pytest.warns(UserWarning, match="rec"):
+        eng = ServeEngine(cfg, RCFG, params, max_slots=1, max_len=32)
+    assert eng.stats()["buckets_enabled"] is False
+    # one-time: a second engine of the same arch stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ServeEngine(cfg, RCFG, params, max_slots=1, max_len=32)
+    # explicit opt-out is not a surprise -> no warning either
+    engine_mod._BUCKET_WARNED.clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ServeEngine(cfg, RCFG, params, max_slots=1, max_len=32,
+                    prefill_buckets=False)
+
+
+def test_buckets_enabled_in_stats_for_bucketable_arch():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, RCFG, params, max_slots=1, max_len=32)
+    st = eng.stats()
+    assert st["buckets_enabled"] is True
+    assert st["replica_shards"] == 1
+    assert "insert_count" in st and "insert_ms_avg" in st

@@ -520,17 +520,26 @@ def test_submit_rejection_names_pool_and_token_deficit():
     assert "raise pool_tokens" in msg          # the remedy
 
 
-def test_shard_slots_paged_error_is_actionable():
-    from repro.serve.cache import shard_slots
+def test_quant_paged_on_mesh_matches_single_host():
+    """int8 page pools shard per replica on a mesh (serve/cache.shard_slots)
+    and the quantized sharded decode path emits the same tokens as the
+    single-host engine. (Pool divisibility errors are exercised on a real
+    multi-device mesh in tests/test_multidevice.py.)"""
+    from jax.sharding import Mesh
 
     cfg = get_config("internlm2-1.8b_smoke")
-    caches = init_caches(cfg, RCFG, 2, 32, layout="paged", page_size=8)
-    with pytest.raises(NotImplementedError) as ei:
-        shard_slots(caches, mesh=None)
-    msg = str(ei.value)
-    assert "single-host" in msg                # the restriction
-    assert "cache_layout='dense'" in msg       # the mesh fallback
-    assert "PagedKVCache" in msg               # what it found
+    params, _ = init_model(cfg, RCFG, jax.random.key(0))
+    prompts = _make_prompts(cfg, [9, 6], seed=13)
+    mk = lambda: [Request(uid=i, tokens=prompts[i], max_new_tokens=5)
+                  for i in range(2)]
+    kw = dict(max_slots=2, max_len=64, decode_block=4, cache_layout="paged",
+              page_size=8, cache_compress="int8")
+    solo = ServeEngine(cfg, RCFG, params, **kw).run(mk())
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng = ServeEngine(cfg, RCFG, params, mesh=mesh, **kw)
+    out = eng.run(mk())
+    for i in range(2):
+        assert out[i].tokens == solo[i].tokens
 
 
 def test_cache_compress_requires_paged_layout():

@@ -419,3 +419,80 @@ def test_data_axis_helpers():
         sh.validate_batch_divisible(7, mesh, where="test")
     with pytest.raises(ValueError, match="grad_accum"):
         sh.validate_batch_divisible(8, mesh, grad_accum=3, where="test")
+
+
+# ---------------------------------------------------------------------------
+# sharded paged serving: per-replica page pools on the mesh
+# ---------------------------------------------------------------------------
+def _paged_serve_tokens(mesh, *, compress=None, max_slots=4, pool_tokens=None):
+    from repro.models import init_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    eng = ServeEngine(cfg, rcfg, params, max_slots=max_slots, max_len=32,
+                      decode_block=4, mesh=mesh, cache_layout="paged",
+                      page_size=8, pool_tokens=pool_tokens,
+                      cache_compress=compress)
+    reqs = [
+        Request(uid=i,
+                tokens=[int(t) for t in np.random.default_rng(i).integers(
+                    1, cfg.vocab_size, size=10)],
+                max_new_tokens=6)
+        for i in range(6)
+    ]
+    out = {u: o.tokens for u, o in eng.run(reqs).items()}
+    return eng, out
+
+
+@multidevice
+@pytest.mark.parametrize("compress", [None, "int8"])
+def test_serving_sharded_paged_parity_dp2(compress):
+    """Paged (and int8-quantized) pools sharded per replica over a dp=2
+    mesh emit token streams identical to the single-host engine, and the
+    pool leaves really carry the data axis."""
+    _, base = _paged_serve_tokens(None, compress=compress)
+    eng, dp2 = _paged_serve_tokens(make_debug_mesh(2, 1), compress=compress)
+    assert base == dp2
+    # one allocator per pool per replica shard, each budgeting half the pool
+    n_pools = len(eng.pool_labels) // eng.n_replicas
+    assert eng.n_replicas == 2
+    assert len(eng.allocators) == 2 * n_pools
+    assert eng.pool_labels[0].startswith("replica0/")
+    # pool leaves are sharded on the page axis (shard axis -> data)
+    from repro.models.attention import PAGED_CACHE_TYPES
+    node = next(n for st in eng.caches for n in st
+                if isinstance(n, PAGED_CACHE_TYPES))
+    assert "data" in jax.tree.leaves(tuple(node.k_pages.sharding.spec))
+    for alloc in eng.allocators:
+        alloc.check_invariant()
+        assert alloc.free_pages == alloc.spec.n_pages  # fully drained
+
+
+@multidevice
+def test_serving_sharded_paged_dp4_placement():
+    """dp=4: admission spreads requests across replica shards (every shard
+    serves someone) and token streams still match single-host."""
+    _, base = _paged_serve_tokens(None, max_slots=4)
+    eng, dp4 = _paged_serve_tokens(make_debug_mesh(4, 1), max_slots=4)
+    assert base == dp4
+    assert eng.n_replicas == 4
+    assert eng.max_slots // eng.n_replicas == 1
+
+
+@multidevice
+def test_serving_paged_pool_indivisible_raises():
+    from repro.models import init_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("internlm2-1.8b_smoke")
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    # 3 pages of 8 tokens: not divisible into 2 replica shards
+    with pytest.raises(ValueError, match="DP degree"):
+        ServeEngine(cfg, rcfg, params, max_slots=2, max_len=32,
+                    cache_layout="paged", page_size=8, pool_tokens=24,
+                    mesh=make_debug_mesh(2, 1))

@@ -307,15 +307,29 @@ def test_submit_rejects_request_larger_than_pool():
         eng.submit(Request(uid=0, tokens=list(range(30)), max_new_tokens=20))
 
 
-def test_paged_on_mesh_is_rejected():
+def test_paged_on_mesh_matches_single_host():
+    """Paged serving on a (1-device) mesh: the per-replica sharded pool
+    path produces the same tokens as the plain single-host engine.
+    (Real multi-device shard parity lives in tests/test_multidevice.py.)"""
     from jax.sharding import Mesh
 
     cfg = get_config("internlm2-1.8b_smoke")
     params, _ = init_model(cfg, RCFG, jax.random.key(0))
+    prompts = _make_prompts(cfg, [10, 7], seed=11)
+    mk = lambda: [Request(uid=i, tokens=prompts[i], max_new_tokens=5)
+                  for i in range(2)]
+    solo = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=64,
+                       decode_block=4, cache_layout="paged",
+                       page_size=8).run(mk())
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    with pytest.raises(NotImplementedError, match="paged serving"):
-        ServeEngine(cfg, RCFG, params, max_slots=1, max_len=32, mesh=mesh,
-                    cache_layout="paged")
+    eng = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=64,
+                      decode_block=4, cache_layout="paged", page_size=8,
+                      mesh=mesh)
+    out = eng.run(mk())
+    for i in range(2):
+        assert out[i].tokens == solo[i].tokens
+    assert eng.n_replicas == 1
+    _drained(eng)
 
 
 # ---------------------------------------------------------------------------
