@@ -26,6 +26,14 @@ API per stage (prefill / insert / generate) and the Router's replica
 scaling: aggregate admissible concurrency must grow >= 3x from 1 to 4
 decode replicas at a fixed per-replica pool budget, tokens identical to
 the solo engine.
+
+``run_prefix_shared`` (``serving_prefix_shared``) is the ISSUE 8
+acceptance workload: requests sharing a long system prompt at a fixed
+pool budget must admit >= 2x the unshared paged concurrency via
+copy-on-write page adoption, and a warm greedy replay with
+``speculative_k=4`` (donor-stream drafts) must decode >= 1.5x the
+tok/s of the per-token fused decode path — token streams identical to
+the unshared, non-speculative engine throughout.
 """
 from __future__ import annotations
 
@@ -383,8 +391,114 @@ def run_disagg(budget: str = "small"):
         f"replica scaling {scaling:.2f} < 3x acceptance (1 -> 4 replicas)"
 
 
+def run_prefix_shared(budget: str = "small"):
+    """Copy-on-write prefix sharing + speculative verify acceptance
+    (``serving_prefix_shared``).
+
+    Part 1 — capacity: 16 requests sharing one long system prompt
+    against a pool sized for ~4 unshared reservations. The unshared
+    engine re-reserves the full prompt per request; prefix sharing
+    adopts the system prompt's full pages (one refcounted physical copy)
+    and COW-splits only the divergent partial page, so admission charges
+    just the per-request tail. Acceptance: >= 2x peak admissible
+    concurrency, token streams identical to the unshared engine.
+
+    Part 2 — latency: a warm replay of the same prompts with
+    ``speculative_k=4``. Retired prefixes seed donor streams, so drafts
+    come from the previous generation and verify in ONE fused (k+1)-row
+    call through the paged flash-decode path — ~5 emitted tokens per
+    model call vs 1 for the per-token fused decode baseline.
+    Acceptance: >= 1.5x decode tok/s, tokens identical.
+    """
+    arch = "internlm2-1.8b_smoke" if budget == "small" else "llama-60m"
+    if budget == "small":
+        n_req, system_len, gen, page = 16, 260, 12, 16
+    else:
+        n_req, system_len, gen, page = 16, 516, 32, 32
+    # system_len is deliberately NOT page-aligned: followers diverge
+    # mid-page, so every admission after the first exercises the COW
+    # split. Tails are > page so each prompt also owns distinct full
+    # pages — the replay can then match its OWN retired prefix end-to-
+    # end and draft from the donor stream.
+    tail = lambda i: page + i % 3
+    max_len = system_len + 2 * page + gen
+    per_req_pages = -(-(system_len + tail(2) + gen) // page)
+    pool_tokens = 4 * (per_req_pages + 1) * page
+    cfg = get_config(arch)
+    rcfg = RunConfig(compute_dtype="float32", param_dtype="float32",
+                     policy_name="none")
+    params, _ = init_model(cfg, rcfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab_size, size=system_len).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab_size,
+                                     size=tail(i)).tolist()
+               for i in range(n_req)]
+    mk = lambda off: [Request(uid=off + i, tokens=prompts[i],
+                              max_new_tokens=gen) for i in range(n_req)]
+    kw = dict(max_slots=n_req, max_len=max_len, decode_block=1,
+              cache_layout="paged", page_size=page,
+              pool_tokens=pool_tokens, prefix_cache=n_req)
+
+    # ---- capacity at a fixed pool budget --------------------------------
+    eng_b = ServeEngine(cfg, rcfg, params, **kw)
+    out_b = eng_b.run(mk(0))
+    eng_s = ServeEngine(cfg, rcfg, params, prefix_share=True, **kw)
+    out_s = eng_s.run(mk(0))
+    for i in range(n_req):
+        assert out_s[i].tokens == out_b[i].tokens, \
+            f"prefix sharing diverged on request {i}"
+    st_b, st_s = eng_b.stats(), eng_s.stats()
+    conc_b, conc_s = st_b["peak_active"], st_s["peak_active"]
+    emit("serving_prefix_shared_concurrency_unshared", conc_b,
+         f"pool={pool_tokens}tok page={page} system={system_len}")
+    emit("serving_prefix_shared_concurrency_shared", conc_s,
+         f"hits={st_s['prefix_hits']} pages_adopted="
+         f"{st_s['prefix_pages_adopted']} cow_splits="
+         f"{st_s['cow_page_splits']}")
+    conc_ratio = conc_s / max(1, conc_b)
+    emit("serving_prefix_shared_concurrency_ratio", conc_ratio,
+         "acceptance: >= 2x admissible concurrency at fixed pool budget")
+
+    # ---- speculative replay decode throughput ---------------------------
+    eng_k = ServeEngine(cfg, rcfg, params, prefix_share=True,
+                        speculative_k=4, **kw)
+    eng_k.run(mk(0))              # cold: compile, retire prefixes, seed donors
+    eng_k.reset_stats()
+    out_r = eng_k.run(mk(1000))   # warm replay: donor-stream drafts
+    eng_b.reset_stats()
+    out_b2 = eng_b.run(mk(1000))  # warmed per-token fused decode baseline
+    for i in range(n_req):
+        assert out_r[1000 + i].tokens == out_b[i].tokens, \
+            f"speculative replay diverged on request {i}"
+        assert out_b2[1000 + i].tokens == out_b[i].tokens
+    st_k, st_b2 = eng_k.stats(), eng_b.stats()
+    tps_base, tps_spec = st_b2["decode_tok_s"], st_k["decode_tok_s"]
+    spec_ratio = tps_spec / max(1e-9, tps_base)
+    emit("serving_prefix_shared_decode_per_token", tps_base,
+         "per-token fused decode baseline, tok/s")
+    emit("serving_prefix_shared_decode_speculative", tps_spec,
+         f"k=4 verify calls={st_k['spec_verify_calls']} accept_rate="
+         f"{st_k['spec_accept_rate']:.2f}")
+    emit("serving_prefix_shared_spec_speedup_x", spec_ratio,
+         "acceptance: >= 1.5x decode tok/s on the warm greedy replay")
+    note(f"[serving-prefix-shared] {arch} {n_req} reqs sharing "
+         f"{system_len}-token system prompt, pool={pool_tokens} tok: "
+         f"concurrency {conc_s} shared vs {conc_b} unshared "
+         f"({conc_ratio:.1f}x), {st_s['cow_page_splits']} cow splits; "
+         f"replay decode {tps_spec:.0f} tok/s spec(k=4) vs "
+         f"{tps_base:.0f} per-token ({spec_ratio:.1f}x, accept rate "
+         f"{st_k['spec_accept_rate']:.2f}); tokens identical")
+    assert conc_ratio >= 2.0, \
+        f"shared concurrency ratio {conc_ratio:.2f} < 2x acceptance"
+    assert spec_ratio >= 1.5, \
+        f"speculative replay speedup {spec_ratio:.2f} < 1.5x acceptance"
+    assert st_k["spec_accept_rate"] >= 0.5, \
+        f"donor drafting regressed: accept rate {st_k['spec_accept_rate']:.2f}"
+
+
 if __name__ == "__main__":
     run()
     run_paged_mixed()
     run_paged_kvquant()
     run_disagg()
+    run_prefix_shared()

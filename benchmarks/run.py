@@ -30,6 +30,7 @@ HARNESSES = [
     ("serving_paged_mixed", "benchmarks.bench_serving:run_paged_mixed"),
     ("serving_kvquant", "benchmarks.bench_serving:run_paged_kvquant"),
     ("serving_disagg", "benchmarks.bench_serving:run_disagg"),
+    ("serving_prefix_shared", "benchmarks.bench_serving:run_prefix_shared"),
     ("multidevice_scaling", "benchmarks.bench_scaling"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]

@@ -199,19 +199,27 @@ def flash_decode_ref(q, k, v, q_pos, slot_pos, *, causal: bool = True,
                      window: int = 0, scale: float | None = None):
     """Pure-jnp oracle / CPU serving path (same signature, same math).
 
-    Materializes (B, KV, G, S) scores — one query row per kv head — not the
-    (B, KV, G, 1, S) tensor the old chunk=1 sdpa path built. ``scale``
-    overrides the ``dh**-0.5`` score scale (the svd cache path operates on
-    rank-r vectors but must keep the original head_dim's scale).
+    Handles any Lq >= 1: the speculative verify path feeds a short block
+    of drafted tokens — q (B, Lq, H, dh) with per-row positions q_pos
+    (B, Lq) — through the same masking, so verification is a short-Lq
+    prefill against the decode cache. ``q_pos`` may also stay (B,) for
+    the classic single-query step. Per-row math is identical to running
+    the rows one at a time (row-independent einsums), which is what makes
+    speculative verify token-identical to sequential decode.
+
+    Materializes (B, Lq, KV, G, S) scores. ``scale`` overrides the
+    ``dh**-0.5`` score scale (the svd cache path operates on rank-r
+    vectors but must keep the original head_dim's scale).
     """
     B, Lq, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
     scale = dh ** -0.5 if scale is None else scale
-    qg = q.reshape(B, KV, G, dh).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
-    qp = q_pos.reshape(B)[:, None, None, None]
-    sp = slot_pos[:, None, None, :]
+    qg = q.reshape(B, Lq, KV, G, dh).astype(jnp.float32)
+    s = jnp.einsum("blkgd,bskd->blkgs", qg, k.astype(jnp.float32)) * scale
+    qp = q_pos.reshape(B, -1)                       # (B, Lq) or (B, 1)
+    qp = qp[:, :, None, None, None]
+    sp = slot_pos[:, None, None, None, :]
     mask = sp >= 0
     if causal:
         mask = mask & (sp <= qp)
@@ -219,13 +227,13 @@ def flash_decode_ref(q, k, v, q_pos, slot_pos, *, causal: bool = True,
         mask = mask & (qp - sp < window)
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
-    return out.reshape(B, 1, H, dh).astype(q.dtype)
+    out = jnp.einsum("blkgs,bskd->blkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, dh).astype(q.dtype)
 
 
 def _paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ppos_ref,
                          o_ref, m_ref, l_ref, acc_ref, *, nb: int, kv: int,
-                         causal: bool, window: int, scale: float):
+                         lq: int, causal: bool, window: int, scale: float):
     bh = pl.program_id(0)
     jk = pl.program_id(1)
 
@@ -243,14 +251,18 @@ def _paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ppos_ref,
 
     @pl.when(page >= 0)
     def _tile():
-        q = q_ref[0].astype(jnp.float32)       # (G, dhp)
+        q = q_ref[0].astype(jnp.float32)       # (lq*G, dhp)
         k = k_ref[0, 0].astype(jnp.float32)    # (psp, dhp)
         v = v_ref[0, 0].astype(jnp.float32)    # (psp, dhp)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale                               # (G, psp)
+        ) * scale                               # (lq*G, psp)
 
-        qpos = qpos_ref[0, 0]
+        # per-row query position: row l*G + g is query l (speculative
+        # verify feeds lq > 1 drafted tokens at ascending positions)
+        g = q_ref.shape[1] // lq
+        qpos = qpos_ref[...].reshape(lq, 1)     # (lq, 1)
+        qpos = jnp.broadcast_to(qpos, (lq, g)).reshape(lq * g, 1)
         spos = ppos_ref[...]                    # (1, psp) absolute positions
         mask = spos >= 0
         if causal:
@@ -282,17 +294,24 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
                               page_pos, *, causal: bool = True,
                               window: int = 0, interpret: bool = True,
                               scale: float | None = None):
-    """q: (B, 1, H, dh); k_pages, v_pages: (n_pages, page_size, KV, dh);
-    q_pos: (B,) int32 absolute; block_table: (B, nb) int32 physical page
-    per logical block (-1 = unmapped); page_pos: (n_pages, page_size)
-    int32 absolute-position-per-slot (-1 = empty). Returns (B, 1, H, dh).
+    """q: (B, Lq, H, dh); k_pages, v_pages: (n_pages, page_size, KV, dh);
+    q_pos: (B,) or (B, Lq) int32 absolute; block_table: (B, nb) int32
+    physical page per logical block (-1 = unmapped); page_pos:
+    (n_pages, page_size) int32 absolute-position-per-slot (-1 = empty).
+    Returns (B, Lq, H, dh).
+
+    Lq > 1 is the speculative-verify path: the Lq drafted queries fold
+    into the kernel's row (sublane) dim next to the G grouped heads —
+    (B*KV, Lq*G, dhp) — so one grid walk over the pages scores every
+    draft at once, with per-row positions rebuilt in VMEM from the
+    (1, Lq) qpos block. The grid and page gathers are identical to the
+    Lq=1 step; only the row count of the score tile grows.
 
     The kv tile size IS the page size, so pick page_size >= the dtype's
     sublane granule (8 for f32, 16 for bf16) on real TPUs; smaller pages
     are padded (pad rows masked via page_pos = -1).
     """
     B, Lq, H, dh = q.shape
-    assert Lq == 1, "flash_paged_decode is the single-query path"
     n_pages, ps, KV, _ = k_pages.shape
     nb = block_table.shape[1]
     G = H // KV
@@ -302,7 +321,8 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
     dhp, psp = dh + pdh, ps + pps
 
     qr = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pdh)))
-    qr = qr.reshape(B, KV, G, dhp).reshape(B * KV, G, dhp)
+    qr = qr.reshape(B, Lq, KV, G, dhp).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(B * KV, Lq * G, dhp)
     # kv head becomes the leading (grid-indexed) dim; page stays a whole
     # block so the index map can pick it straight off the block table.
     kt = jnp.pad(k_pages, ((0, 0), (0, pps), (0, 0), (0, pdh))
@@ -310,21 +330,22 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
     vt = jnp.pad(v_pages, ((0, 0), (0, pps), (0, 0), (0, pdh))
                  ).transpose(2, 0, 1, 3)
     pposr = jnp.pad(page_pos, ((0, 0), (0, pps)), constant_values=-1)
-    qposr = q_pos.reshape(B, 1).astype(jnp.int32)
+    qposr = jnp.broadcast_to(q_pos.reshape(B, -1), (B, Lq)).astype(jnp.int32)
     bt = block_table.astype(jnp.int32)
 
     def page_of(bh, jk, bt_ref):
         return jnp.maximum(bt_ref[bh // KV, jk], 0)
 
     out = pl.pallas_call(
-        functools.partial(_paged_decode_kernel, nb=nb, kv=KV, causal=causal,
-                          window=window, scale=scale),
+        functools.partial(_paged_decode_kernel, nb=nb, kv=KV, lq=Lq,
+                          causal=causal, window=window, scale=scale),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B * KV, nb),
             in_specs=[
-                pl.BlockSpec((1, 1), lambda bh, jk, bt_ref: (bh // KV, 0)),
-                pl.BlockSpec((1, G, dhp), lambda bh, jk, bt_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, Lq), lambda bh, jk, bt_ref: (bh // KV, 0)),
+                pl.BlockSpec((1, Lq * G, dhp),
+                             lambda bh, jk, bt_ref: (bh, 0, 0)),
                 pl.BlockSpec((1, 1, psp, dhp),
                              lambda bh, jk, bt_ref:
                              (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
@@ -335,18 +356,19 @@ def flash_paged_decode_kernel(q, k_pages, v_pages, q_pos, block_table,
                              lambda bh, jk, bt_ref:
                              (page_of(bh, jk, bt_ref), 0)),
             ],
-            out_specs=pl.BlockSpec((1, G, dhp),
+            out_specs=pl.BlockSpec((1, Lq * G, dhp),
                                    lambda bh, jk, bt_ref: (bh, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((G, 1), jnp.float32),
-                pltpu.VMEM((G, 1), jnp.float32),
-                pltpu.VMEM((G, dhp), jnp.float32),
+                pltpu.VMEM((Lq * G, 1), jnp.float32),
+                pltpu.VMEM((Lq * G, 1), jnp.float32),
+                pltpu.VMEM((Lq * G, dhp), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B * KV, G, dhp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Lq * G, dhp), q.dtype),
         interpret=interpret,
     )(bt, qposr, qr, kt, vt, pposr)
-    return out.reshape(B, KV, G, dhp)[..., :dh].reshape(B, 1, H, dh)
+    out = out.reshape(B, KV, Lq, G, dhp)[..., :dh]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Lq, H, dh)
 
 
 def flash_paged_decode_ref(q, k_pages, v_pages, q_pos, block_table, page_pos,
@@ -412,8 +434,9 @@ def _dequant_tile(qt, sc, bits: int, group: int):
 
 def _quant_paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
                                vs_ref, ppos_ref, o_ref, m_ref, l_ref, acc_ref,
-                               *, nb: int, kv: int, causal: bool, window: int,
-                               scale: float, bits: int, group: int):
+                               *, nb: int, kv: int, lq: int, causal: bool,
+                               window: int, scale: float, bits: int,
+                               group: int):
     bh = pl.program_id(0)
     jk = pl.program_id(1)
 
@@ -427,14 +450,16 @@ def _quant_paged_decode_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
 
     @pl.when(page >= 0)
     def _tile():
-        q = q_ref[0].astype(jnp.float32)                  # (G, W)
+        q = q_ref[0].astype(jnp.float32)                  # (lq*G, W)
         k = _dequant_tile(k_ref[0, 0], ks_ref[0, 0], bits, group)
         v = _dequant_tile(v_ref[0, 0], vs_ref[0, 0], bits, group)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale                                          # (G, psp)
+        ) * scale                                          # (lq*G, psp)
 
-        qpos = qpos_ref[0, 0]
+        g = q_ref.shape[1] // lq
+        qpos = qpos_ref[...].reshape(lq, 1)                # per-query rows
+        qpos = jnp.broadcast_to(qpos, (lq, g)).reshape(lq * g, 1)
         spos = ppos_ref[...]                               # (1, psp)
         mask = spos >= 0
         if causal:
@@ -478,7 +503,6 @@ def flash_paged_decode_quant_kernel(q, k_pages, v_pages, k_scale, v_scale,
     is ``dh // ngr``.
     """
     B, Lq, H, dh = q.shape
-    assert Lq == 1, "flash_paged_decode_quant is the single-query path"
     n_pages, ps, KV, dhq = k_pages.shape
     bits = 8 if dhq == dh else 4
     assert dhq == (dh if bits == 8 else dh // 2), (dhq, dh)
@@ -498,7 +522,8 @@ def flash_paged_decode_quant_kernel(q, k_pages, v_pages, k_scale, v_scale,
     assert sgr == 1 or (W % group == 0 and sgr >= ngr), (W, group, ngr)
 
     qr = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, W - dh)))
-    qr = qr.reshape(B, KV, G, W).reshape(B * KV, G, W)
+    qr = qr.reshape(B, Lq, KV, G, W).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(B * KV, Lq * G, W)
     kt = jnp.pad(k_pages, ((0, 0), (0, pps), (0, 0), (0, dhqp - dhq))
                  ).transpose(2, 0, 1, 3)        # (KV, n_pages, psp, dhqp)
     vt = jnp.pad(v_pages, ((0, 0), (0, pps), (0, 0), (0, dhqp - dhq))
@@ -508,22 +533,23 @@ def flash_paged_decode_quant_kernel(q, k_pages, v_pages, k_scale, v_scale,
     vst = jnp.pad(v_scale, ((0, 0), (0, pps), (0, 0), (0, sgr - ngr))
                   ).transpose(2, 0, 1, 3)
     pposr = jnp.pad(page_pos, ((0, 0), (0, pps)), constant_values=-1)
-    qposr = q_pos.reshape(B, 1).astype(jnp.int32)
+    qposr = jnp.broadcast_to(q_pos.reshape(B, -1), (B, Lq)).astype(jnp.int32)
     bt = block_table.astype(jnp.int32)
 
     def page_of(bh, jk, bt_ref):
         return jnp.maximum(bt_ref[bh // KV, jk], 0)
 
     out = pl.pallas_call(
-        functools.partial(_quant_paged_decode_kernel, nb=nb, kv=KV,
+        functools.partial(_quant_paged_decode_kernel, nb=nb, kv=KV, lq=Lq,
                           causal=causal, window=window, scale=scale,
                           bits=bits, group=group),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B * KV, nb),
             in_specs=[
-                pl.BlockSpec((1, 1), lambda bh, jk, bt_ref: (bh // KV, 0)),
-                pl.BlockSpec((1, G, W), lambda bh, jk, bt_ref: (bh, 0, 0)),
+                pl.BlockSpec((1, Lq), lambda bh, jk, bt_ref: (bh // KV, 0)),
+                pl.BlockSpec((1, Lq * G, W),
+                             lambda bh, jk, bt_ref: (bh, 0, 0)),
                 pl.BlockSpec((1, 1, psp, dhqp),
                              lambda bh, jk, bt_ref:
                              (bh % KV, page_of(bh, jk, bt_ref), 0, 0)),
@@ -540,18 +566,19 @@ def flash_paged_decode_quant_kernel(q, k_pages, v_pages, k_scale, v_scale,
                              lambda bh, jk, bt_ref:
                              (page_of(bh, jk, bt_ref), 0)),
             ],
-            out_specs=pl.BlockSpec((1, G, W),
+            out_specs=pl.BlockSpec((1, Lq * G, W),
                                    lambda bh, jk, bt_ref: (bh, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((G, 1), jnp.float32),
-                pltpu.VMEM((G, 1), jnp.float32),
-                pltpu.VMEM((G, W), jnp.float32),
+                pltpu.VMEM((Lq * G, 1), jnp.float32),
+                pltpu.VMEM((Lq * G, 1), jnp.float32),
+                pltpu.VMEM((Lq * G, W), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B * KV, G, W), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Lq * G, W), q.dtype),
         interpret=interpret,
     )(bt, qposr, qr, kt, vt, kst, vst, pposr)
-    return out.reshape(B, KV, G, W)[..., :dh].reshape(B, 1, H, dh)
+    out = out.reshape(B, KV, Lq, G, W)[..., :dh]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Lq, H, dh)
 
 
 def flash_paged_decode_quant_ref(q, k_pages, v_pages, k_scale, v_scale,

@@ -58,6 +58,8 @@ def _make_engine(cfg, rcfg, params, args, *, mesh=None, slots=None):
                        page_size=args.page_size,
                        pool_tokens=args.pool_tokens or None,
                        cache_compress=args.cache_compress,
+                       prefix_share=args.prefix_share,
+                       speculative_k=args.speculative_k,
                        mesh=mesh)
 
 
@@ -125,6 +127,16 @@ def main(argv=None):
                     help="shard one engine's slots/pools into this many "
                          "per-replica shards on a device mesh (needs that "
                          "many devices)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="copy-on-write prefix sharing: requests whose "
+                         "prompts share full KV pages with a live or "
+                         "recently-retired request adopt those pages "
+                         "instead of re-reserving them (paged layout, "
+                         "single replica; DESIGN.md §9)")
+    ap.add_argument("--speculative-k", type=int, default=0,
+                    help="self-speculative decode: draft k tokens on the "
+                         "host and verify them in one fused multi-row "
+                         "decode call (paged layout, greedy sampling)")
     ap.add_argument("--smoke", action="store_true",
                     help="run twice, assert determinism and tok/s > 0")
     args = ap.parse_args(argv)
@@ -167,6 +179,17 @@ def main(argv=None):
               f"replica shards {stats['replica_shards']} | "
               f"compression x{stats['cache/kv_compression_x']:.2f} | "
               f"{stats['prefill_compiles']} prefill compiles")
+        if args.prefix_share:
+            print(f"[prefix-share] hits {stats['prefix_hits']} | pages "
+                  f"adopted {stats['prefix_pages_adopted']} | cow splits "
+                  f"{stats['cow_page_splits']} | retired prefixes kept "
+                  f"{stats['retired_prefixes']}")
+        if args.speculative_k:
+            print(f"[speculative k={args.speculative_k}] verify calls "
+                  f"{stats['spec_verify_calls']} | drafted "
+                  f"{stats['spec_tokens_drafted']} | accepted "
+                  f"{stats['spec_tokens_accepted']} | accept rate "
+                  f"{stats['spec_accept_rate']:.2f}")
 
     if args.smoke:
         again, stats2 = _serve_once(cfg, rcfg, params, args)

@@ -270,9 +270,10 @@ def paged_addresses(positions, block_table, ring, page_size: int, nb: int):
 
 
 def paged_insert(cache, k_new, v_new, positions):
-    """Insert one decode step's K/V rows (B, 1, KV, dh) at ``positions``
-    (B, 1) through the block table. Invalid positions / unmapped blocks
-    are dropped — the paged counterpart of ``cache_insert``'s parked-slot
+    """Insert L decode rows (B, L, KV, dh) at ``positions`` (B, L)
+    through the block table — L = 1 is the classic decode step, L > 1 the
+    speculative-verify block. Invalid positions / unmapped blocks are
+    dropped — the paged counterpart of ``cache_insert``'s parked-slot
     trick. Works on any paged cache whose pages match ``k_new``'s trailing
     dims (fp pools, and the svd cache's rank-r pools)."""
     n_pages, ps = cache.k_pages.shape[:2]
@@ -280,13 +281,12 @@ def paged_insert(cache, k_new, v_new, positions):
     page, off = paged_addresses(positions, cache.block_table, cache.ring,
                                 ps, nb)
     page = jnp.where(page >= 0, page, n_pages)  # invalid -> OOB (mode=drop)
-    p1, o1 = page[:, 0], off[:, 0]
     return cache._replace(
-        k_pages=cache.k_pages.at[p1, o1].set(
-            k_new[:, 0].astype(cache.k_pages.dtype), mode="drop"),
-        v_pages=cache.v_pages.at[p1, o1].set(
-            v_new[:, 0].astype(cache.v_pages.dtype), mode="drop"),
-        page_pos=cache.page_pos.at[p1, o1].set(positions[:, 0], mode="drop"),
+        k_pages=cache.k_pages.at[page, off].set(
+            k_new.astype(cache.k_pages.dtype), mode="drop"),
+        v_pages=cache.v_pages.at[page, off].set(
+            v_new.astype(cache.v_pages.dtype), mode="drop"),
+        page_pos=cache.page_pos.at[page, off].set(positions, mode="drop"),
     )
 
 
@@ -333,8 +333,8 @@ def quant_cache_bits(cache: QuantPagedKVCache, dh: int) -> int:
 
 def paged_insert_quant(cache: QuantPagedKVCache, k_new, v_new, positions,
                        dh: int) -> QuantPagedKVCache:
-    """Quantize-on-write: one decode step's rows (B, 1, KV, dh) become
-    int pages + scales at their block-table addresses."""
+    """Quantize-on-write: L decode rows (B, L, KV, dh) become int pages +
+    scales at their block-table addresses (L > 1 = speculative verify)."""
     bits = quant_cache_bits(cache, dh)
     ngr = cache.k_scale.shape[-1]
     n_pages, ps = cache.k_pages.shape[:2]
@@ -344,13 +344,12 @@ def paged_insert_quant(cache: QuantPagedKVCache, k_new, v_new, positions,
     page, off = paged_addresses(positions, cache.block_table, cache.ring,
                                 ps, nb)
     page = jnp.where(page >= 0, page, n_pages)
-    p1, o1 = page[:, 0], off[:, 0]
     return cache._replace(
-        k_pages=cache.k_pages.at[p1, o1].set(kq[:, 0], mode="drop"),
-        v_pages=cache.v_pages.at[p1, o1].set(vq[:, 0], mode="drop"),
-        k_scale=cache.k_scale.at[p1, o1].set(ks[:, 0], mode="drop"),
-        v_scale=cache.v_scale.at[p1, o1].set(vs[:, 0], mode="drop"),
-        page_pos=cache.page_pos.at[p1, o1].set(positions[:, 0], mode="drop"),
+        k_pages=cache.k_pages.at[page, off].set(kq, mode="drop"),
+        v_pages=cache.v_pages.at[page, off].set(vq, mode="drop"),
+        k_scale=cache.k_scale.at[page, off].set(ks, mode="drop"),
+        v_scale=cache.v_scale.at[page, off].set(vs, mode="drop"),
+        page_pos=cache.page_pos.at[page, off].set(positions, mode="drop"),
     )
 
 
@@ -497,12 +496,15 @@ def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
 
 def attn_decode(params, x, positions, cache, cfg, *, window: int,
                 kernel: bool = False):
-    """One-step decode: x (B, 1, d), positions (B, 1) absolute.
+    """Decode attention: x (B, L, d), positions (B, L) absolute. L = 1 is
+    the classic per-token step; L > 1 is the speculative-verify block (the
+    drafted tokens insert and score in one call, with per-row causal
+    masking from their absolute positions).
 
-    Attention runs through the single-query flash path (kernels/
+    Attention runs through the short-query flash path (kernels/
     flash_decode.py): Pallas online-softmax over kv tiles when ``kernel``,
-    else its jnp oracle — either way without the (B, KV, G, 1, S) score
-    tensor the chunk=1 sdpa used to materialize. ``cache`` picks the
+    else its jnp oracle — either way without the (B, KV, G, L, S) score
+    tensor the chunked sdpa used to materialize. ``cache`` picks the
     layout: a :class:`KVCache` reads its dense slot-contiguous slab, a
     :class:`PagedKVCache` gathers kv tiles through its block table — the
     math (and the tokens) are identical either way.
@@ -516,7 +518,7 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
                                                cfg.head_dim)
             out = flash_sharded_paged_decode_quant(
                 q, cache.k_pages, cache.v_pages, cache.k_scale,
-                cache.v_scale, positions[:, 0], cache.block_table,
+                cache.v_scale, positions, cache.block_table,
                 cache.page_pos, causal=True, window=window,
                 use_pallas=kernel,
             )
@@ -524,7 +526,7 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
             cache = paged_insert_quant(cache, k, v, positions, cfg.head_dim)
             out = flash_paged_decode_quant(
                 q, cache.k_pages, cache.v_pages, cache.k_scale,
-                cache.v_scale, positions[:, 0], cache.block_table,
+                cache.v_scale, positions, cache.block_table,
                 cache.page_pos, causal=True, window=window,
                 use_pallas=kernel,
             )
@@ -549,7 +551,7 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
         paged_fn = (flash_sharded_paged_decode if sharded
                     else flash_paged_decode)
         out = paged_fn(
-            qc, cache.k_pages, cache.v_pages, positions[:, 0],
+            qc, cache.k_pages, cache.v_pages, positions,
             cache.block_table, cache.page_pos,
             causal=True, window=window, scale=dh ** -0.5, use_pallas=kernel,
         )
@@ -561,21 +563,21 @@ def attn_decode(params, x, positions, cache, cfg, *, window: int,
         if paged_cache_sharded(cache):
             cache = sharded_paged_insert(cache, k, v, positions)
             out = flash_sharded_paged_decode(
-                q, cache.k_pages, cache.v_pages, positions[:, 0],
+                q, cache.k_pages, cache.v_pages, positions,
                 cache.block_table, cache.page_pos,
                 causal=True, window=window, use_pallas=kernel,
             )
         else:
             cache = paged_insert(cache, k, v, positions)
             out = flash_paged_decode(
-                q, cache.k_pages, cache.v_pages, positions[:, 0],
+                q, cache.k_pages, cache.v_pages, positions,
                 cache.block_table, cache.page_pos,
                 causal=True, window=window, use_pallas=kernel,
             )
     else:
         cache = cache_insert(cache, k, v, positions)
         out = flash_decode(
-            q, cache.k, cache.v, positions[:, 0], cache.slot_pos,
+            q, cache.k, cache.v, positions, cache.slot_pos,
             causal=True, window=window, use_pallas=kernel,
         )
     out = out.reshape(*x.shape[:-1], -1)

@@ -403,8 +403,12 @@ def prefill(cfg, rcfg, params, batch, max_len: int, plan=None,
 def decode_step(cfg, rcfg, params, tokens, pos, caches, extras_batch=None):
     """One decode step for the whole batch.
 
-    tokens: (B, 1) int32 (or (B, 1, d) embeds); pos: (B, 1) absolute position.
-    Returns (logits (B, 1, V*), new_caches).
+    tokens: (B, L) int32 (or (B, L, d) embeds); pos: (B, L) absolute
+    positions. L = 1 is the classic per-token step; L > 1 feeds a
+    speculative-verify block through the same path — every per-block op
+    is row-independent for attention kinds (attn/swa/latt/xattn), so row
+    l's logits match a sequential L = 1 run fed the same prefix exactly.
+    Returns (logits (B, L, V*), new_caches).
     """
     cdt, _ = _dtype(rcfg)
     if cfg.embed_inputs:

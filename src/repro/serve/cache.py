@@ -86,12 +86,13 @@ def mask_pad_rows(caches, prompt_len):
     return jax.tree.map(f, caches, is_leaf=lambda n: isinstance(n, KVCache))
 
 
-def _splice_paged(fc: PagedKVCache, oc: KVCache, row, slot, prompt_len):
+def _splice_paged(fc: PagedKVCache, oc: KVCache, row, slot, prompt_len,
+                  start):
     """Install ``row`` as ``slot``'s block table and scatter the batch-1
     prefill cache ``oc`` into the owned pages. ``fc`` leaves carry the
     layer-stack dim; the row is shared by every layer of the stack."""
     bt, ppos, spos, page, off, lidx = _paged_splice_targets(
-        fc, oc, row, slot, prompt_len)
+        fc, oc, row, slot, prompt_len, start)
     return fc._replace(
         k_pages=fc.k_pages.at[lidx, page, off].set(
             oc.k[:, 0].astype(fc.k_pages.dtype), mode="drop"),
@@ -102,16 +103,27 @@ def _splice_paged(fc: PagedKVCache, oc: KVCache, row, slot, prompt_len):
     )
 
 
-def _paged_splice_targets(fc, oc, row, slot, prompt_len):
+def _paged_splice_targets(fc, oc, row, slot, prompt_len, start):
     """Shared splice plumbing: block-table install, page_pos reset, and
-    the (page, off) scatter addresses of the prompt's valid rows."""
+    the (page, off) scatter addresses of the prompt's valid rows.
+
+    ``start`` (traced int32 scalar, 0 for an unshared admission) is the
+    copy-on-write boundary in tokens: the row's first ``start // ps``
+    pages were ADOPTED from a live prefix owner, so their ``page_pos``
+    must NOT be reset (the owner is still reading them) and the prompt
+    rows below ``start`` must NOT be re-scattered (they would land on the
+    shared pages and corrupt the owner). Rows in ``[start, prompt_len)``
+    splice into the fresh tail pages as usual; the partially shared page
+    (if ``start`` is not page-aligned) is a fresh page whose leading rows
+    arrive separately via :func:`cow_split_pages`."""
     nlayers, n_pages, ps = fc.k_pages.shape[:3]
     nb = fc.block_table.shape[2]
     bt = fc.block_table.at[:, slot].set(row)
-    resetp = jnp.where(row >= 0, row, n_pages)
+    fresh = jnp.arange(nb) >= start // ps
+    resetp = jnp.where((row >= 0) & fresh, row, n_pages)
     ppos = fc.page_pos.at[:, resetp].set(-1, mode="drop")
     spos = oc.slot_pos[:, 0]
-    spos = jnp.where(spos < prompt_len, spos, -1)
+    spos = jnp.where((spos >= start) & (spos < prompt_len), spos, -1)
     page, off = paged_addresses(
         spos, jnp.broadcast_to(row[None], (nlayers, nb)), fc.ring[0], ps, nb)
     page = jnp.where(page >= 0, page, n_pages)
@@ -120,14 +132,14 @@ def _paged_splice_targets(fc, oc, row, slot, prompt_len):
 
 
 def _splice_paged_quant(fc: QuantPagedKVCache, oc: KVCache, row, slot,
-                        prompt_len):
+                        prompt_len, start):
     """Quantize the batch-1 prefill cache's K/V rows (exactly the decode
     path's quantizer) and scatter pages + scales through the new row."""
     dh = oc.k.shape[-1]
     bits = 8 if fc.k_pages.shape[-1] == dh else 4
     ngr = fc.k_scale.shape[-1]
     bt, ppos, spos, page, off, lidx = _paged_splice_targets(
-        fc, oc, row, slot, prompt_len)
+        fc, oc, row, slot, prompt_len, start)
     kq, ks = quantize_kv(oc.k[:, 0], bits, ngr)
     vq, vs = quantize_kv(oc.v[:, 0], bits, ngr)
     return fc._replace(
@@ -141,11 +153,11 @@ def _splice_paged_quant(fc: QuantPagedKVCache, oc: KVCache, row, slot,
 
 
 def _splice_paged_svd(fc: SVDPagedKVCache, oc: KVCache, row, slot,
-                      prompt_len):
+                      prompt_len, start):
     """Project the prefill K/V into each layer's rank-r basis, then
     scatter the coefficients like any paged splice."""
     bt, ppos, spos, page, off, lidx = _paged_splice_targets(
-        fc, oc, row, slot, prompt_len)
+        fc, oc, row, slot, prompt_len, start)
     kb = fc.k_basis.astype(jnp.float32)   # (layers, KV, dh, r)
     vb = fc.v_basis.astype(jnp.float32)
     kc = jnp.einsum("lskd,lkdr->lskr", oc.k[:, 0].astype(jnp.float32), kb)
@@ -196,13 +208,20 @@ def _put_shard(node, sub, shard):
         for f in _pool_fields(node)})
 
 
-def write_slot_paged(full, one, rows, slot, prompt_len):
+def write_slot_paged(full, one, rows, slot, prompt_len, starts=None):
     """Splice a batch-1 prefill cache ``one`` into ``slot`` of the paged
     engine cache ``full``. ``rows`` mirrors the cache tree: a (nb,) int32
     block-table row per paged node, None elsewhere. Dense nodes (ring
     flags, recurrent/SSM states, cross-attn image K/V, and any KVCache
     kept dense) take the ordinary slot splice, with bucketing pad rows
     masked for KV nodes.
+
+    ``starts`` (optional) mirrors ``rows``: a traced int32 scalar per
+    paged node giving the copy-on-write share boundary in tokens — the
+    row's leading ``start // page_size`` pages are adopted from a live
+    prefix owner and must be left untouched (no page_pos reset, no
+    re-scatter). ``None`` (or a ``None`` entry) means an unshared
+    admission (start = 0).
 
     Sharded paged nodes (leading per-replica shard axis; block-table page
     ids local to their shard) route the GLOBAL slot id to (shard, local
@@ -215,20 +234,75 @@ def write_slot_paged(full, one, rows, slot, prompt_len):
         shard = slot // slots_per_shard
         sub = _take_shard(full, shard)
         sub = write_slot_paged(sub, one, rows, slot % slots_per_shard,
-                               prompt_len)
+                               prompt_len, starts)
         return _put_shard(full, sub, shard)
+    start = jnp.int32(0) if starts is None else starts
     if isinstance(full, QuantPagedKVCache):
-        return _splice_paged_quant(full, one, rows, slot, prompt_len)
+        return _splice_paged_quant(full, one, rows, slot, prompt_len, start)
     if isinstance(full, SVDPagedKVCache):
-        return _splice_paged_svd(full, one, rows, slot, prompt_len)
+        return _splice_paged_svd(full, one, rows, slot, prompt_len, start)
     if isinstance(full, PagedKVCache):
-        return _splice_paged(full, one, rows, slot, prompt_len)
+        return _splice_paged(full, one, rows, slot, prompt_len, start)
     if isinstance(full, KVCache):
         return write_slot(full, mask_pad_rows(one, prompt_len), slot)
     if isinstance(full, list):
-        return [write_slot_paged(f, o, r, slot, prompt_len)
-                for f, o, r in zip(full, one, rows)]
+        st = starts if starts is not None else [None] * len(full)
+        return [write_slot_paged(f, o, r, slot, prompt_len, s)
+                for f, o, r, s in zip(full, one, rows, st)]
     return write_slot(full, one, slot)
+
+
+def _cow_copy_rows(fc, src, dst, lo, hi):
+    """Copy page ``src``'s rows with positions in ``[lo, hi)`` into page
+    ``dst`` of one (unsharded) stacked paged node. ``src``/``dst`` are
+    traced int32 scalars; -1 in either means no-op for this node. The
+    copied rows keep their ``page_pos``, so the destination page reads
+    exactly like the source's live prefix while rows outside the window
+    stay invalid (-1 from the splice's reset)."""
+    n_pages, ps = fc.k_pages.shape[1:3]
+    nlayers = fc.k_pages.shape[0]
+    srcc = jnp.clip(src, 0, n_pages - 1)
+    pp = jax.lax.dynamic_index_in_dim(
+        fc.page_pos, srcc, axis=1, keepdims=False)          # (layers, ps)
+    live = (pp >= lo) & (pp < hi) & (src >= 0) & (dst >= 0)
+    offm = jnp.where(live, jnp.arange(ps)[None, :], ps)      # OOB -> drop
+    dstc = jnp.where((src >= 0) & (dst >= 0), dst, n_pages)  # OOB -> drop
+    lidx = jnp.arange(nlayers)[:, None]
+
+    def take(a):
+        return jax.lax.dynamic_index_in_dim(a, srcc, axis=1, keepdims=False)
+
+    upd = {
+        f: getattr(fc, f).at[lidx, dstc, offm].set(
+            take(getattr(fc, f)), mode="drop")
+        for f in _pool_fields(fc) if f not in ("block_table", "page_pos")
+    }
+    upd["page_pos"] = fc.page_pos.at[lidx, dstc, offm].set(pp, mode="drop")
+    return fc._replace(**upd)
+
+
+def cow_split_pages(full, srcs, dsts, lo, hi):
+    """Copy-on-write split after a prefix-shared splice: for every paged
+    node, copy the divergent page's still-shared leading rows — positions
+    in ``[lo, hi)`` — from the owner's page ``srcs[node]`` into the
+    adopter's fresh page ``dsts[node]``. ``srcs``/``dsts`` mirror the
+    cache tree like ``rows`` in :func:`write_slot_paged` (a traced int32
+    scalar per paged node, None elsewhere); -1 disables the copy for a
+    node (page-aligned divergence needs none). The engine runs this ONCE
+    per admission, after :func:`write_slot_paged` and before any decode
+    write, so the adopter's stream stays bit-identical to an unshared
+    run. Prefix sharing is gated to single-replica engines, so sharded
+    nodes are rejected here rather than routed."""
+    if isinstance(full, PAGED_CACHE_TYPES):
+        if paged_node_sharded(full):
+            raise NotImplementedError(
+                "copy-on-write prefix sharing is single-replica only; "
+                "sharded paged pools cannot reach cow_split_pages")
+        return _cow_copy_rows(full, srcs, dsts, lo, hi)
+    if isinstance(full, list):
+        return [cow_split_pages(f, s, d, lo, hi)
+                for f, s, d in zip(full, srcs, dsts)]
+    return full
 
 
 def kv_cache_nodes(caches):

@@ -76,6 +76,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 import warnings
 from typing import Any, Optional, Sequence
@@ -97,6 +98,18 @@ PAD_TOKEN = -1
 # archs already warned about prefill-bucket auto-disable (one warning per
 # arch per process, not one per engine — engines churn in tests/benches)
 _BUCKET_WARNED: set[str] = set()
+
+
+def _percentile(sorted_samples, p: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted list: the smallest
+    sample with at least ``p`` of the mass at or below it, i.e. index
+    ``ceil(p * n) - 1``. (``int(p * n)`` overshoots: p50 of two samples
+    would return the max.)"""
+    n = len(sorted_samples)
+    if n == 0:
+        return 0.0
+    rank = max(1, math.ceil(p * n))
+    return sorted_samples[min(n - 1, rank - 1)]
 
 
 @dataclasses.dataclass
@@ -206,6 +219,27 @@ class DecodeState:
 
 
 @dataclasses.dataclass
+class _PrefixEntry:
+    """One request in the copy-on-write prefix index.
+
+    ``rows`` holds the request's block-table row per paged pool (numpy,
+    flat in cache-tree pool order) — the page ids future requests adopt.
+    A LIVE entry's pages are kept by its slot's allocator ownership; a
+    RETIRED entry keeps only its prompt pages, via an extra
+    ``("prefix", uid)`` allocator reference, and additionally records the
+    full token ``stream`` (prompt + generation) as a draft donor for
+    speculative decode — a new request with the same prompt will, under
+    greedy sampling, reproduce that continuation until its sampling
+    params diverge from the donor's."""
+
+    uid: int
+    tokens: tuple               # prompt token ids
+    rows: list                  # per-pool (nb,) np.int32 block-table rows
+    stream: list | None = None  # prompt + generated (set at retirement)
+    retired: bool = False
+
+
+@dataclasses.dataclass
 class GenerateOutput:
     """Raw product of one fused decode block (orchestrator bookkeeping
     input): per-step emitted tokens and activity masks, host-side."""
@@ -231,7 +265,9 @@ class ServeEngine:
                  mesh=None, cache_layout: str | None = None,
                  page_size: int | None = None, pool_tokens: int | None = None,
                  prefill_buckets: bool | None = None,
-                 cache_compress: str | None = None):
+                 cache_compress: str | None = None,
+                 prefix_share: bool = False, speculative_k: int = 0,
+                 prefix_cache: int = 8):
         if cfg.embed_inputs:
             raise NotImplementedError(
                 "serving needs a token frontend; embed-input archs "
@@ -375,6 +411,66 @@ class ServeEngine:
                     "buckets_enabled=False)", stacklevel=2)
         self.bucket_lens: set[int] = set()
 
+        # --- copy-on-write prefix sharing + self-speculative decode ---
+        self.prefix_share = bool(prefix_share)
+        self.speculative_k = int(speculative_k)
+        self.prefix_cache = int(prefix_cache)
+        if self.speculative_k < 0 or self.prefix_cache < 0:
+            raise ValueError("speculative_k and prefix_cache must be >= 0")
+        if self.prefix_share:
+            if self.cache_layout != "paged":
+                raise ValueError(
+                    "prefix_share adopts page-pool pages between requests; "
+                    "the dense layout has no pages — pass "
+                    "cache_layout='paged'")
+            if self.n_replicas != 1:
+                raise ValueError(
+                    "prefix_share is single-replica: sharded pools keep "
+                    "shard-local page ids, so adopting another slot's "
+                    "pages could alias across shards — run one engine "
+                    "per replica behind serve/router.py instead")
+            if cfg.vision_tokens:
+                raise ValueError(
+                    "prefix_share identifies a prefix by its prompt "
+                    "tokens alone; vision archs carry per-request image "
+                    "state the index cannot compare")
+            if any(spec.ring for spec, _, _ in pool_specs):
+                raise ValueError(
+                    "prefix_share needs append-only pools; ring "
+                    "(sliding-window) pools overwrite their pages in "
+                    "place, so an adopted prefix page would be clobbered "
+                    "by the owner's later tokens")
+        if self.speculative_k:
+            if self.cache_layout != "paged":
+                raise ValueError(
+                    "speculative_k verifies k+1 draft rows in one fused "
+                    "call through the paged flash-decode path — pass "
+                    "cache_layout='paged'")
+            bad = sorted(kinds - {"attn"})
+            if bad:
+                raise ValueError(
+                    f"speculative_k needs every block to accept multi-row "
+                    f"decode queries; {'/'.join(bad)} blocks are "
+                    "sequential/windowed and verify row-by-row only")
+        # prefix index: live entries keyed by uid; retired entries in an
+        # LRU whose pages stay adoptable via ("prefix", uid) allocator
+        # references until capacity pressure or the prefix_cache cap
+        # evicts them. _prefix_bykey maps (n_full_pages, hash(prompt
+        # prefix)) -> uid for O(pages) matching.
+        self._prefix_live: dict[int, _PrefixEntry] = {}
+        self._retired: "collections.OrderedDict[int, _PrefixEntry]" = \
+            collections.OrderedDict()
+        self._prefix_bykey: dict[tuple[int, int], int] = {}
+        self._draft_donor: dict[int, list[int]] = {}
+        self._donor_ok: dict[int, int] = {}
+        self.prefix_hits = 0
+        self.prefix_pages_adopted = 0
+        self.cow_page_splits = 0
+        self.spec_verify_calls = 0
+        self.spec_tokens_drafted = 0
+        self.spec_tokens_accepted = 0
+        self._spec_fns: dict[int, callable] = {}
+
         self.queue: collections.deque[Request] = collections.deque()
         self._outputs: dict[int, list[int]] = {}
         self._decode_acc: dict[int, float] = {}
@@ -421,6 +517,8 @@ class ServeEngine:
             donate_argnums=donate0)
         self._write_slot_paged = jax.jit(cache_lib.write_slot_paged,
                                          donate_argnums=donate0)
+        self._cow_fn = jax.jit(cache_lib.cow_split_pages,
+                               donate_argnums=donate0)
         self._sample_first = jax.jit(self._sample_first_impl)
 
     # decode_state delegation: the pre-stage-API attribute surface
@@ -482,6 +580,162 @@ class ServeEngine:
             fn = jax.jit(loop, donate_argnums=self._donate)
             self._decode_fns[steps] = fn
         return fn
+
+    def _get_spec_verify(self, k: int):
+        """Jitted speculative verify: ONE decode_step over (B, k+1) rows
+        — the last token plus k drafts — through the multi-row paged
+        flash-decode path. Returns the greedy continuation at every row;
+        row t's logits see exactly the tokens a sequential greedy decode
+        would have seen IF drafts 1..t are correct, so the leading run of
+        draft==greedy matches is exactly the sequential stream (causal
+        masking keeps rows written for rejected drafts inert — they sit
+        at future positions and are overwritten before anything reads
+        them)."""
+        fn = self._spec_fns.get(k)
+        if fn is None:
+            cfg, rcfg, vocab = self.cfg, self.rcfg, self.cfg.vocab_size
+
+            def verify(params, caches, toks, pos, active):
+                positions = jnp.where(
+                    active[:, None],
+                    pos[:, None] + jnp.arange(k + 1, dtype=jnp.int32)[None],
+                    -1)
+                logits, caches = decode_step(cfg, rcfg, params, toks,
+                                             positions, caches)
+                greedy = jnp.argmax(
+                    logits[..., :vocab].astype(jnp.float32),
+                    axis=-1).astype(jnp.int32)
+                return caches, greedy
+
+            fn = jax.jit(verify, donate_argnums=self._donate)
+            self._spec_fns[k] = fn
+        return fn
+
+    def _ngram_draft(self, hist: list, n: int) -> list:
+        """n cheap draft tokens from the request's own history: longest
+        n-gram suffix match (3, 2, 1) over a bounded recent window, with
+        repeat-last as the floor. Pure host work — never touches the
+        model."""
+        out: list[int] = []
+        h = [int(x) for x in hist[-256:]]
+        for _ in range(n):
+            nxt = None
+            for g in (3, 2, 1):
+                if len(h) <= g:
+                    continue
+                pat = h[-g:]
+                for i in range(len(h) - g - 1, -1, -1):
+                    if h[i:i + g] == pat:
+                        nxt = h[i + g]
+                        break
+                if nxt is not None:
+                    break
+            if nxt is None:
+                nxt = h[-1]
+            out.append(nxt)
+            h.append(nxt)
+        return out
+
+    def _draft_tokens(self, uid: int, hist: list, k: int) -> list:
+        """k draft tokens for a request. A donor stream (a retired
+        request that shared the FULL prompt) drafts first — under greedy
+        sampling the new request reproduces the donor's continuation
+        verbatim until real divergence, so replayed traffic accepts at
+        ~100%. ``_donor_ok`` tracks how much of the history has already
+        been checked against the donor, keeping the validity check O(new
+        tokens) per call instead of O(history)."""
+        d: list[int] = []
+        donor = self._draft_donor.get(uid)
+        if donor is not None:
+            ok = self._donor_ok.get(uid, 0)
+            L = len(hist)
+            while ok < L and ok < len(donor) and int(donor[ok]) == int(hist[ok]):
+                ok += 1
+            if ok < L:            # diverged from the donor: it is spent
+                self._draft_donor.pop(uid, None)
+                self._donor_ok.pop(uid, None)
+            else:
+                self._donor_ok[uid] = ok
+                d = [int(x) for x in donor[L:L + k]]
+        if len(d) < k:
+            d.extend(self._ngram_draft(list(hist) + d, k - len(d)))
+        return d[:k]
+
+    def _generate_spec(self, params, decode_state: DecodeState
+                       ) -> tuple[DecodeState, GenerateOutput]:
+        """Speculative decode block: draft k tokens per active slot on
+        the host, verify all of them in ONE fused (B, k+1) decode_step,
+        then emit the leading accepted run plus the model's own next
+        token — replicating the sequential loop's per-token stop
+        semantics exactly. Rejected suffixes need no rollback: their
+        cache rows sit at positions this slot has not reached, and the
+        next call rewrites them before any query can attend that far."""
+        ds = decode_state
+        k = self.speculative_k
+        B = self.max_slots
+        t0 = time.perf_counter()
+        drafts = np.zeros((B, k), np.int32)
+        for b in range(B):
+            if not ds.active[b]:
+                continue
+            uid = int(ds.slot_uid[b])
+            req = self._requests.get(uid)
+            if req is not None and uid in self._outputs:
+                hist = [int(x) for x in req.tokens] + \
+                    [int(x) for x in self._outputs[uid]]
+            else:
+                # stage-API use without the orchestrator's bookkeeping:
+                # no history to mine, fall back to repeat-last
+                hist = [int(ds.tok[b])]
+            drafts[b] = np.asarray(self._draft_tokens(uid, hist, k),
+                                   np.int32)
+        fn = self._get_spec_verify(k)
+        caches, greedy = fn(
+            params, ds.caches,
+            jnp.asarray(np.concatenate([ds.tok[:, None], drafts], axis=1)),
+            jnp.asarray(ds.pos), jnp.asarray(ds.active))
+        ds.caches = caches
+        greedy = np.array(greedy)                      # (B, k+1)
+        emitted = np.full((k + 1, B), PAD_TOKEN, np.int32)
+        was_active = np.zeros((k + 1, B), bool)
+        n_act = int(ds.active.sum())
+        self.spec_verify_calls += 1
+        self.spec_tokens_drafted += k * n_act
+        for b in range(B):
+            if not ds.active[b]:
+                continue
+            a = 0
+            while a < k and drafts[b, a] == greedy[b, a]:
+                a += 1
+            self.spec_tokens_accepted += a
+            tok = int(ds.tok[b])
+            pos = int(ds.pos[b])
+            rem = int(ds.remaining[b])
+            gi = int(ds.gen_idx[b])
+            eos = int(ds.eos_ids[b])
+            alive = True
+            for t in range(a + 1):
+                nxt = int(greedy[b, t])
+                emitted[t, b] = nxt
+                was_active[t, b] = True
+                tok, pos, rem, gi = nxt, pos + 1, rem - 1, gi + 1
+                if not (rem > 0 and nxt != eos and pos < self.max_len - 1):
+                    alive = False
+                    break
+            ds.tok[b] = tok
+            ds.pos[b] = pos
+            ds.remaining[b] = rem
+            ds.gen_idx[b] = gi
+            ds.active[b] = alive
+        dt = time.perf_counter() - t0
+        n_emitted = int(was_active.sum())
+        n_steps_run = int(was_active.any(axis=1).sum())
+        self.decode_tokens += n_emitted
+        self.decode_time += dt
+        if n_steps_run:
+            self.latency_samples.extend([dt / n_steps_run] * n_steps_run)
+        return ds, GenerateOutput(emitted=emitted, was_active=was_active,
+                                  steps=k + 1, seconds=dt)
 
     # ------------------------------------------------------------------
     # stage API: prefill -> Prefix -> insert -> DecodeState -> generate
@@ -546,10 +800,29 @@ class ServeEngine:
             # host-transferred Prefix (router handoff): re-device the tree
             pcaches = jax.tree.map(jnp.asarray, pcaches)
         if self.allocators:
-            rows = self._alloc_rows(req, slot)
+            share = self._match_prefix(req.tokens)
+            rows, starts, srcs, dsts, flat_rows = self._alloc_rows(
+                req, slot, share)
             decode_state.caches = self._write_slot_paged(
                 decode_state.caches, pcaches, rows, jnp.int32(slot),
-                jnp.int32(lp))
+                jnp.int32(lp), starts)
+            m = 0 if share is None else share[1]
+            lo = (m // self.page_size) * self.page_size
+            if lo < m:
+                # the divergent page is fresh but its leading rows are
+                # still shared content: copy them from the owner's page
+                # BEFORE any decode write lands on this slot
+                decode_state.caches = self._cow_fn(
+                    decode_state.caches, srcs, dsts, jnp.int32(lo),
+                    jnp.int32(m))
+            if self.prefix_share:
+                if (self.speculative_k and share is not None
+                        and m == lp and share[0].stream):
+                    # full-prompt hit on a retired request: its recorded
+                    # continuation drafts this request's greedy stream
+                    self._draft_donor[req.uid] = list(share[0].stream)
+                    self._donor_ok[req.uid] = 0
+                self._register_prefix(req, flat_rows)
         else:
             decode_state.caches = self._write_slot(
                 decode_state.caches, pcaches, jnp.int32(slot),
@@ -588,6 +861,13 @@ class ServeEngine:
             return decode_state, GenerateOutput(
                 emitted=np.full((0, B), PAD_TOKEN, np.int32),
                 was_active=np.zeros((0, B), bool), steps=0, seconds=0.0)
+        if self.speculative_k and not np.any(
+                decode_state.temps[decode_state.active] > 0):
+            # speculative verify is greedy-only (draft==argmax is the
+            # acceptance rule); any sampling request in the batch drops
+            # the whole block to the sequential loop so streams never mix
+            # verify modes mid-request
+            return self._generate_spec(params, decode_state)
         # Don't scan far past the longest remaining generation (inert
         # trailing iterations still run full decode steps over the batch),
         # but round tails up to a power of two: each distinct scan length
@@ -686,17 +966,105 @@ class ServeEngine:
             b <<= 1
         return min(b, self.max_len)
 
+    # ------------------------------------------------------------------
+    # copy-on-write prefix index
+    # ------------------------------------------------------------------
+    def _match_prefix(self, tokens) -> tuple[_PrefixEntry, int] | None:
+        """Longest live/retired prefix match for a prompt: ``(entry, m)``
+        with ``m`` the matched token count. Probes the index from the
+        longest full-page prefix down; the token-equality re-check guards
+        hash collisions, and the partial-page extension stays confined to
+        the first divergent page (that page is the ONE copy-on-write
+        split an admission performs)."""
+        if not self.prefix_share:
+            return None
+        t = tuple(int(x) for x in tokens)
+        ps = self.page_size
+        for j in range(len(t) // ps, 0, -1):
+            key = (j, hash(t[: j * ps]))
+            uid = self._prefix_bykey.get(key)
+            if uid is None:
+                continue
+            entry = self._prefix_live.get(uid) or self._retired.get(uid)
+            if entry is None:
+                del self._prefix_bykey[key]   # evicted owner, stale key
+                continue
+            if entry.tokens[: j * ps] != t[: j * ps]:
+                continue                       # hash collision
+            m = j * ps
+            lim = min(len(entry.tokens), len(t), (j + 1) * ps)
+            while m < lim and entry.tokens[m] == t[m]:
+                m += 1
+            if entry.retired:
+                self._retired.move_to_end(uid)  # LRU touch
+            return entry, m
+        return None
+
+    def _register_prefix(self, req: Request, flat_rows: list) -> None:
+        """Index a just-admitted request as a live prefix owner."""
+        t = tuple(int(x) for x in req.tokens)
+        self._prefix_live[req.uid] = _PrefixEntry(uid=req.uid, tokens=t,
+                                                  rows=flat_rows)
+        for j in range(1, len(t) // self.page_size + 1):
+            self._prefix_bykey[(j, hash(t[: j * self.page_size]))] = req.uid
+
+    def _unindex_prefix(self, entry: _PrefixEntry) -> None:
+        for j in range(1, len(entry.tokens) // self.page_size + 1):
+            key = (j, hash(entry.tokens[: j * self.page_size]))
+            if self._prefix_bykey.get(key) == entry.uid:
+                del self._prefix_bykey[key]
+
+    def _drop_retired(self, uid: int) -> None:
+        """Evict a retired prefix entry: drop its ("prefix", uid) page
+        references (pages free once no adopter still maps them)."""
+        entry = self._retired.pop(uid)
+        for alloc in self.replica_allocators[0]:
+            alloc.release(("prefix", uid))
+        self._unindex_prefix(entry)
+
+    def _evict_one_retired(self) -> bool:
+        """Free the least-recently-matched retired prefix (page
+        pressure); returns False when nothing is left to evict."""
+        if not self._retired:
+            return False
+        self._drop_retired(next(iter(self._retired)))
+        return True
+
+    def _retire_prefix(self, uid: int, generated: list) -> None:
+        """Move a finishing request's entry live -> retired: retain its
+        PROMPT pages under a ("prefix", uid) reference (must run before
+        the slot's own release) and record the full token stream as a
+        speculative draft donor. Oldest retirees fall off the LRU cap."""
+        entry = self._prefix_live.pop(uid, None)
+        if entry is None:
+            return
+        if self.prefix_cache == 0:
+            self._unindex_prefix(entry)
+            return
+        n_prompt_pages = -(-len(entry.tokens) // self.page_size)
+        for alloc, row in zip(self.replica_allocators[0], entry.rows):
+            alloc.retain(("prefix", uid), row[:n_prompt_pages])
+        entry.stream = list(entry.tokens) + [int(x) for x in generated]
+        entry.retired = True
+        self._retired[uid] = entry
+        while len(self._retired) > self.prefix_cache:
+            self._drop_retired(next(iter(self._retired)))
+
     def _can_admit(self, req: Request) -> bool:
         """Paged admission predicate: SOME replica shard has enough free
         pages in EVERY one of its pools for the request's full reservation
         (prompt + worst-case generation — a reserved request can always
-        run to its stop condition; no mid-stream preemption). Dense
-        layout: a free slot is enough."""
+        run to its stop condition; no mid-stream preemption). Prefix
+        sharing charges only the NON-shared page delta — the adopted
+        prefix pages are live already. Dense layout: a free slot is
+        enough."""
         if not self.allocators:
             return True
         total = len(req.tokens) + req.max_new_tokens
+        match = self._match_prefix(req.tokens)
+        s = 0 if match is None else match[1] // self.page_size
         return any(
-            all(a.can_allocate(a.blocks_for(total)) for a in pools)
+            all(a.can_allocate(a.blocks_for(total) - s) for a in pools)
             for pools in self.replica_allocators)
 
     def try_place(self, req: Request) -> int | None:
@@ -713,18 +1081,32 @@ class ServeEngine:
         if not self.allocators:
             return free[0]
         total = len(req.tokens) + req.max_new_tokens
-        best: tuple[int, int] | None = None
-        for rep, pools in enumerate(self.replica_allocators):
-            rep_free = [s for s in free if self._slot_replica(s) == rep]
-            if not rep_free:
-                continue
-            if not all(a.can_allocate(a.blocks_for(total)) for a in pools):
-                continue
-            headroom = min(a.free_pages - a.blocks_for(total)
-                           for a in pools)
-            if best is None or headroom > best[0]:
-                best = (headroom, rep_free[0])
-        return None if best is None else best[1]
+        while True:
+            # rematch every iteration: evicting a retired prefix below
+            # may remove the entry we just matched, and the placement we
+            # return must reflect the allocator state we leave behind
+            match = self._match_prefix(req.tokens)
+            s = 0 if match is None else match[1] // self.page_size
+            best: tuple[int, int] | None = None
+            for rep, pools in enumerate(self.replica_allocators):
+                rep_free = [x for x in free if self._slot_replica(x) == rep]
+                if not rep_free:
+                    continue
+                if not all(a.can_allocate(a.blocks_for(total) - s)
+                           for a in pools):
+                    continue
+                headroom = min(a.free_pages - (a.blocks_for(total) - s)
+                               for a in pools)
+                if best is None or headroom > best[0]:
+                    best = (headroom, rep_free[0])
+            if best is not None:
+                return best[1]
+            # page pressure: retired prefixes are a cache, not a
+            # reservation — give their pages back one LRU entry at a
+            # time and retry until the head request fits or nothing is
+            # left to evict
+            if not self._evict_one_retired():
+                return None
 
     def pool_load(self) -> float:
         """Load factor in [0, 1] for router placement: the tightest
@@ -735,27 +1117,66 @@ class ServeEngine:
         return max(a.reserved_pages / max(1, a.spec.n_pages)
                    for a in self.allocators)
 
-    def _alloc_rows(self, req: Request, slot: int):
+    def _alloc_rows(self, req: Request, slot: int, share=None):
         """Reserve pages in every pool of the slot's replica shard;
-        returns the block-table rows tree (aligned with the cache tree:
-        a (nb,) row of shard-LOCAL page ids per paged node, None
-        elsewhere) for write_slot_paged."""
+        returns ``(rows, starts, srcs, dsts, flat_rows)``:
+
+        * ``rows`` — block-table rows tree (aligned with the cache tree:
+          a (nb,) row of shard-LOCAL page ids per paged node, None
+          elsewhere) for write_slot_paged;
+        * ``starts`` — same-shaped tree of int32 scalars: the prefix-
+          share boundary ``m`` in tokens (0 unshared) — the splice must
+          not touch the adopted pages below it;
+        * ``srcs``/``dsts`` — same-shaped trees of int32 page-id scalars
+          for the copy-on-write split of the divergent page (-1 when the
+          boundary is page-aligned and no copy is needed);
+        * ``flat_rows`` — the numpy rows in flat pool order (prefix-index
+          registration).
+
+        ``share`` is a ``(entry, m)`` match from :meth:`_match_prefix`:
+        the first ``m // page_size`` FULL pages of the entry's rows are
+        adopted (refcount bump, no free-list charge); every pool shares
+        one ``page_size``, so the boundary is common to all of them."""
         total = len(req.tokens) + req.max_new_tokens
         pools = self.replica_allocators[self._slot_replica(slot)]
+        ps = self.page_size
+        entry, m = share if share is not None else (None, 0)
+        s = m // ps
+        need_cow = s * ps < m
         ai = 0
-        rows = []
+        rows, starts, srcs, dsts = [], [], [], []
+        flat_rows: list[np.ndarray] = []
         for stage in self.caches:
-            rstage = []
+            rstage, ststage, srcstage, dststage = [], [], [], []
             for node in stage:
                 if isinstance(node, PAGED_CACHE_TYPES):
                     alloc = pools[ai]
                     ai += 1
-                    row = alloc.allocate(slot, alloc.blocks_for(total))
+                    shared = None if entry is None else entry.rows[ai - 1][:s]
+                    row = alloc.allocate(slot, alloc.blocks_for(total),
+                                         shared=shared)
+                    flat_rows.append(np.array(row))
                     rstage.append(jnp.asarray(row))
+                    ststage.append(jnp.int32(m))
+                    srcstage.append(jnp.int32(
+                        int(entry.rows[ai - 1][s]) if need_cow else -1))
+                    dststage.append(jnp.int32(
+                        int(row[s]) if need_cow else -1))
                 else:
                     rstage.append(None)
+                    ststage.append(None)
+                    srcstage.append(None)
+                    dststage.append(None)
             rows.append(rstage)
-        return rows
+            starts.append(ststage)
+            srcs.append(srcstage)
+            dsts.append(dststage)
+        if m:
+            self.prefix_hits += 1
+            self.prefix_pages_adopted += s * ai
+            if need_cow:
+                self.cow_page_splits += ai
+        return rows, starts, srcs, dsts, flat_rows
 
     def _admit(self, req: Request, slot: int) -> Optional[RequestOutput]:
         """Orchestrated admission: prefill + insert + bookkeeping."""
@@ -793,6 +1214,13 @@ class ServeEngine:
         self.slot_uid[slot] = -1
         self.active[slot] = False
         self.pos[slot] = -1
+        # prefix retirement must precede the slot release: the entry's
+        # prompt pages pick up their ("prefix", uid) reference while the
+        # slot still holds them live
+        if self.prefix_share:
+            self._retire_prefix(uid, toks)
+        self._draft_donor.pop(uid, None)
+        self._donor_ok.pop(uid, None)
         # paged reclamation: pages go back to the host free list; the
         # device cache is untouched (no live block table maps them). Only
         # the slot's own replica shard ever allocated for it — release on
@@ -882,6 +1310,12 @@ class ServeEngine:
         self.peak_active = 0
         self.peak_reserved_bytes = 0
         self.peak_used_bytes = 0
+        self.prefix_hits = 0
+        self.prefix_pages_adopted = 0
+        self.cow_page_splits = 0
+        self.spec_verify_calls = 0
+        self.spec_tokens_drafted = 0
+        self.spec_tokens_accepted = 0
 
     def _cache_usage(self) -> tuple[int, int, int, int]:
         """(reserved_bytes, used_bytes, pages_total, pages_free) right now.
@@ -925,9 +1359,7 @@ class ServeEngine:
         lat = sorted(self.latency_samples)
 
         def pct(p):
-            if not lat:
-                return 0.0
-            return lat[min(len(lat) - 1, int(p * len(lat)))]
+            return _percentile(lat, p)
 
         out = {
             "prefill_tokens": self.prefill_tokens,
@@ -948,6 +1380,19 @@ class ServeEngine:
             "prefill_compiles": len(self.bucket_lens),
             "buckets_enabled": self.prefill_buckets,
             "replica_shards": self.n_replicas,
+            "prefix_share": self.prefix_share,
+            "prefix_hits": self.prefix_hits,
+            "prefix_pages_adopted": self.prefix_pages_adopted,
+            "cow_page_splits": self.cow_page_splits,
+            "shared_pages_now": sum(a.shared_pages for a in self.allocators),
+            "retired_prefixes": len(self._retired),
+            "speculative_k": self.speculative_k,
+            "spec_verify_calls": self.spec_verify_calls,
+            "spec_tokens_drafted": self.spec_tokens_drafted,
+            "spec_tokens_accepted": self.spec_tokens_accepted,
+            "spec_accept_rate": (self.spec_tokens_accepted
+                                 / self.spec_tokens_drafted
+                                 if self.spec_tokens_drafted else 0.0),
             "peak_active": self.peak_active,
             "peak_kv_reserved_bytes": self.peak_reserved_bytes,
             "peak_kv_used_bytes": self.peak_used_bytes,

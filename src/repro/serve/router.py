@@ -65,7 +65,11 @@ class Router:
         worst = None
         for alloc, label, fmt in zip(eng.allocators, eng.pool_labels,
                                      eng.pool_formats):
-            need = alloc.blocks_for(total)
+            try:
+                need = alloc.blocks_for(total)
+            except ValueError as e:
+                # exceeds the slot table outright — can never fit
+                return f"pool {label} [{fmt}]: {e}"
             short = need - alloc.spec.n_pages
             if short > 0 and (worst is None or short > worst[0]):
                 worst = (short, f"pool {label} [{fmt}] is {short} pages "
@@ -73,10 +77,12 @@ class Router:
                                 f"{need} needed)")
         return None if worst is None else worst[1]
 
-    def _least_loaded(self, exclude: int | None = None) -> int:
+    def _least_loaded(self, exclude: int | None = None) -> int | None:
+        """Index of the least-loaded replica, or None when ``exclude``
+        leaves no candidates (single-replica router)."""
         loads = [(eng.pool_load(), i)
                  for i, eng in enumerate(self.replicas) if i != exclude]
-        return min(loads)[1]
+        return min(loads)[1] if loads else None
 
     def submit(self, req: Request, *, replica: int | None = None) -> None:
         """Queue a request; ``replica`` pins it to one decode replica.
@@ -95,11 +101,15 @@ class Router:
                 eng._validate_request(req)
             else:
                 alt = self._least_loaded(exclude=replica)
-                alt_fit = self._fits_capacity(self.replicas[alt], req)
-                alt_note = (
-                    f"replica {alt} (least loaded, load factor "
-                    f"{self.replicas[alt].pool_load():.2f}) could serve it"
-                    if alt_fit is None else "no other replica fits it either")
+                if alt is None:
+                    alt_note = "no other replica exists"
+                else:
+                    alt_fit = self._fits_capacity(self.replicas[alt], req)
+                    alt_note = (
+                        f"replica {alt} (least loaded, load factor "
+                        f"{self.replicas[alt].pool_load():.2f}) could serve it"
+                        if alt_fit is None
+                        else "no other replica fits it either")
                 raise ValueError(
                     f"request {req.uid} pinned to replica {replica} will "
                     f"never fit: {deficit}; {alt_note} — drop the pin or "

@@ -42,9 +42,13 @@ def sample_tokens(logits, seeds, token_idx, temperature, top_k):
     temperature: (B,) float32. Returns (B,) int32 token ids.
 
     Rows with temperature <= 0 are greedy; rows with top_k > 0 restrict
-    the support to the k highest logits (per-row threshold via a
-    descending sort — V is a model vocab, so the sort is cheap next to
-    the decode matmuls).
+    the support to exactly the k highest logits. Ranks come from a
+    *stable* descending argsort, so when logits tie at the k-th value the
+    lower token index wins — a threshold test (``scaled >= thresh``)
+    would keep every tied token and silently widen the support, breaking
+    the bit-identical continuous-batching invariant on hardware that
+    reorders reductions. V is a model vocab, so the sort is cheap next to
+    the decode matmuls.
 
     The whole stochastic path — per-row key derivation (threefry
     fold_in), the sort, and the (B, V) gumbel bits — sits under a
@@ -58,10 +62,14 @@ def sample_tokens(logits, seeds, token_idx, temperature, top_k):
     def stochastic(_):
         keys = request_keys(seeds, token_idx)
         scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
-        kth = jnp.clip(top_k, 1, V) - 1
-        sorted_desc = jnp.flip(jnp.sort(scaled, axis=-1), axis=-1)
-        thresh = jnp.take_along_axis(sorted_desc, kth[:, None], axis=1)
-        support = (top_k[:, None] <= 0) | (scaled >= thresh)
+        # rank[b, v] = 0 for the row's best token, 1 for the runner-up, ...
+        # argsort is stable, so equal logits rank in token-index order and
+        # exactly k tokens survive even with ties at the k-th value.
+        order = jnp.argsort(-scaled, axis=-1, stable=True)
+        ranks = jnp.zeros_like(order).at[
+            jnp.arange(B, dtype=order.dtype)[:, None], order
+        ].set(jnp.broadcast_to(jnp.arange(V, dtype=order.dtype), (B, V)))
+        support = (top_k[:, None] <= 0) | (ranks < jnp.clip(top_k, 1, V)[:, None])
         masked = jnp.where(support, scaled, NEG_INF)
         return jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
 

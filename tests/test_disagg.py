@@ -220,6 +220,25 @@ def test_router_pinned_full_replica_rejection_is_actionable():
     assert len(out[9].tokens) == 10
 
 
+def test_router_single_replica_pinned_rejection_is_actionable():
+    """Regression: a pinned request that can't fit on a single-replica
+    router used to crash with ``min() arg is an empty sequence`` inside
+    _least_loaded; it must raise the actionable capacity error instead,
+    noting there is no alternative replica."""
+    cfg, params = _setup()
+    small = ServeEngine(cfg, RCFG, params, max_slots=2, max_len=64,
+                        cache_layout="paged", page_size=8, pool_tokens=16)
+    router = Router([small])
+    req = Request(uid=9, tokens=list(range(1, 21)), max_new_tokens=10)
+    with pytest.raises(ValueError) as ei:
+        router.submit(req, replica=0)
+    msg = str(ei.value)
+    assert "empty sequence" not in msg         # the old crash
+    assert "pinned to replica 0" in msg
+    assert "no other replica exists" in msg
+    assert "drop the pin or raise pool_tokens" in msg
+
+
 def test_router_rejects_out_of_range_pin():
     cfg, params = _setup()
     router = Router([ServeEngine(cfg, RCFG, params, max_slots=1,

@@ -148,7 +148,9 @@ def test_allocator_alloc_release_append_invariant():
                     token_bytes=4)
     a = PageAllocator(spec)
     assert a.blocks_for(1) == 1 and a.blocks_for(8) == 1
-    assert a.blocks_for(9) == 2 and a.blocks_for(1000) == 4  # table-capped
+    assert a.blocks_for(9) == 2 and a.blocks_for(32) == 4
+    with pytest.raises(ValueError, match="non-ring"):  # loud, not table-capped
+        a.blocks_for(1000)
 
     row0 = a.allocate(0, 3)
     assert (row0 >= 0).sum() == 3 and a.free_pages == 3
@@ -172,6 +174,23 @@ def test_allocator_alloc_release_append_invariant():
     assert a.release(1) == 0  # idempotent
     assert a.reserved_bytes == 0
     assert a.used_tokens(1000) == spec.logical_size  # ring-style clamp
+
+
+def test_allocator_blocks_for_non_ring_overflow_raises():
+    """Regression: blocks_for on a non-ring pool silently capped the
+    answer at blocks_per_slot, so over-long requests were admitted with
+    truncated reservations and trampled the cache. It must raise; only
+    ring (sliding-window) pools legitimately cap at the table size."""
+    spec = PoolSpec(page_size=8, n_pages=6, blocks_per_slot=4, ring=False,
+                    token_bytes=4)
+    a = PageAllocator(spec)
+    assert a.blocks_for(32) == 4               # exactly the table
+    with pytest.raises(ValueError, match="non-ring slot table holds"):
+        a.blocks_for(33)                       # one token over
+    ring = PageAllocator(PoolSpec(page_size=8, n_pages=6, blocks_per_slot=4,
+                                  ring=True, token_bytes=4))
+    assert ring.blocks_for(33) == 4            # ring wraps: cap is correct
+    assert ring.blocks_for(10_000) == 4
 
 
 # ---------------------------------------------------------------------------

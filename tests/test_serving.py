@@ -120,6 +120,41 @@ def test_sampling_top_k_support():
         assert int(toks[b]) in order[b, :k]
 
 
+def test_sampling_top_k_tied_logits_keep_exactly_k_lowest_indices():
+    """Regression: when logits tie at the k-th value, the support must
+    stay exactly k wide with the lower token indices winning (stable
+    argsort ranks). The old threshold test (scaled >= kth value) kept
+    every tied token, silently widening the support."""
+    V, k, draws = 12, 3, 64
+    logits = jnp.zeros((draws, V))            # all V logits tie
+    toks = sample_tokens(logits, jnp.arange(draws, dtype=jnp.int32),
+                         jnp.zeros(draws, jnp.int32), jnp.full((draws,), 1.0),
+                         jnp.full((draws,), k, jnp.int32))
+    assert set(np.asarray(toks).tolist()) <= set(range(k))
+    # tie straddling the boundary: [5, 5, 1, 5, ...] with k=2 keeps
+    # tokens {0, 1} (indices of the first two 5s), never token 3
+    row = jnp.zeros((draws, V)).at[:, [0, 1, 3]].set(5.0).at[:, 2].set(1.0)
+    toks = sample_tokens(row, jnp.arange(draws, dtype=jnp.int32),
+                         jnp.zeros(draws, jnp.int32), jnp.full((draws,), 1.0),
+                         jnp.full((draws,), 2, jnp.int32))
+    assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+
+def test_percentile_nearest_rank():
+    """Regression: p50 of two samples is the FIRST (nearest-rank
+    ceil(p*n)), not the max — int(p*n) indexing overshot."""
+    from repro.serve.engine import _percentile
+
+    assert _percentile([1.0, 9.0], 0.50) == 1.0
+    assert _percentile([1.0, 9.0], 0.95) == 9.0
+    assert _percentile([1.0, 2.0, 3.0], 0.50) == 2.0
+    assert _percentile([7.0], 0.50) == 7.0 and _percentile([7.0], 0.95) == 7.0
+    assert _percentile([], 0.50) == 0.0
+    samples = [float(i) for i in range(1, 21)]
+    assert _percentile(samples, 0.95) == 19.0   # ceil(.95*20)=19th sample
+    assert _percentile(samples, 1.00) == 20.0
+
+
 def test_sampling_deterministic_per_seed_and_index():
     """The stream depends only on (seed, token index) — not slot or step."""
     logits = jax.random.normal(jax.random.key(11), (2, 40))
