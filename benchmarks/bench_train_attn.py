@@ -82,5 +82,93 @@ def run(budget: str = "small"):
          f"(CPU interpret mode — not a TPU number)")
 
 
+# ---------------------------------------------------------------------------
+# reversible blocks: residual-stream activation accounting + max context
+# ---------------------------------------------------------------------------
+STREAM_MODES = ("exact", "remat_full", "reversible")
+
+
+def residual_stream_bytes(cfg, B: int, L: int, *, mode: str,
+                          bytes_per_el: int = 4) -> int:
+    """Residual-stream activations saved for backward across the depth.
+
+    This counts only the (B, L, d) stream tensors the block structure
+    itself pins — the attention/FFN internals are accounted separately
+    (:func:`attn_activation_bytes`) and are identical across modes.
+
+    exact:       plain autodiff saves each block's input and its post-mixer
+                 intermediate — 2 per layer, so 2 * n_layers * B*L*d.
+    remat_full:  only the layer-boundary carry survives; sublayers are
+                 recomputed — n_layers * B*L*d.
+    reversible:  the stage custom_vjp's residuals are the stage OUTPUT
+                 streams — two streams as compensated (hi, lo) pairs, so
+                 4 * n_stages * B*L*d, independent of layers-per-stage
+                 (near-O(1) in depth).
+    """
+    per = B * L * cfg.d_model * bytes_per_el
+    n_layers = sum(len(unit) * rep for unit, rep in cfg.stages)
+    if mode == "exact":
+        return 2 * n_layers * per
+    if mode == "remat_full":
+        return n_layers * per
+    if mode == "reversible":
+        return 4 * len(cfg.stages) * per
+    raise ValueError(f"mode {mode!r}: one of {STREAM_MODES}")
+
+
+def max_trainable_context(cfg, budget_bytes: int, *, mode: str,
+                          B: int = 1) -> int:
+    """Longest context whose residual-stream bytes fit ``budget_bytes``."""
+    return budget_bytes // residual_stream_bytes(cfg, B, 1, mode=mode)
+
+
+def run_revnet(budget: str = "small"):
+    """block_structure=reversible: activation accounting + timed step.
+
+    Accounting runs at paper scale (llama-350m, 24 layers) where depth
+    dominates; the timed rows run the CPU-sized llama-tiny.
+    """
+    acct_arch = "llama-350m" if budget == "small" else "llama-1b"
+    cfg = get_config(acct_arch)
+    B, L = 1, 4096
+    budget_bytes = 256 * 2**20
+    for mode in STREAM_MODES:
+        mb = residual_stream_bytes(cfg, B, L, mode=mode) / 2**20
+        emit(f"revnet_stream_mb[{mode}]", mb,
+             f"arch={acct_arch} B={B} L={L} residual-stream MB saved for bwd")
+    ctx = {mode: max_trainable_context(cfg, budget_bytes, mode=mode)
+           for mode in STREAM_MODES}
+    for mode, tokens in ctx.items():
+        emit(f"revnet_max_ctx[{mode}]", tokens,
+             f"arch={acct_arch} max trainable context (tokens) at "
+             f"{budget_bytes / 2**20:.0f} MB stream budget")
+    gain = ctx["reversible"] / ctx["exact"]
+    emit("revnet_ctx_gain_over_exact", gain,
+         f"reversible/exact max-context ratio at fixed budget "
+         f"(= n_layers/(2*n_stages) = {gain:.1f}x)")
+    note(f"[train_revnet] {acct_arch}: stream bytes/layer-step exact "
+         f"2*B*L*d vs reversible 4*B*L*d per STAGE -> {gain:.1f}x longer "
+         f"context at {budget_bytes / 2**20:.0f} MB")
+    assert gain >= 4.0, (
+        f"reversible max-context gain {gain:.2f}x < 4x on {acct_arch}")
+
+    # timed: reversible vs residual train step (CPU-sized arch, jnp attn)
+    arch, seq, gb = "llama-tiny", 64, 2
+    tcfg = get_config(arch)
+    stream = SyntheticStream.for_arch(tcfg, seq, gb)
+    batch = {k: jnp.asarray(v) for k, v in stream.get_batch(0).items()}
+    for structure in ("residual", "reversible"):
+        rcfg = RunConfig(compression="attn.qkv=pamm(r=1/8);ffn.*=compact(r=1/4)",
+                         compute_dtype="float32", param_dtype="float32",
+                         block_structure=structure)
+        state, _ = init_train_state(tcfg, rcfg, jax.random.key(0))
+        step = jax.jit(make_train_step(tcfg, rcfg, total_steps=100))
+        us = timeit(lambda: step(state, batch, jnp.int32(1))[1]["loss"],
+                    warmup=1, iters=3)
+        emit(f"train_step_revnet[{structure}]", us,
+             f"arch={arch} B={gb} L={seq} tok_per_s={gb * seq / (us / 1e6):.0f}")
+
+
 if __name__ == "__main__":
     run()
+    run_revnet()

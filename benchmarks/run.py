@@ -19,6 +19,7 @@ import time
 HARNESSES = [
     ("table2_throughput", "benchmarks.bench_throughput"),
     ("train_attn_kernel", "benchmarks.bench_train_attn"),
+    ("train_revnet", "benchmarks.bench_train_attn:run_revnet"),
     ("fig3a_table5_pretrain_ppl_memory", "benchmarks.bench_pretrain_ppl"),
     ("table3_bs_seq_ablation", "benchmarks.bench_ablation_bs_seq"),
     ("fig4a_compression_compare", "benchmarks.bench_compression_compare"),

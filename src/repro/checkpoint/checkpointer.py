@@ -3,7 +3,8 @@
 Layout of a checkpoint directory::
 
     <root>/step_000123/
-        arrays.npz          # flattened pytree, '/'-joined path keys
+        arrays.npz          # flattened pytree, jax.tree_util.keystr path keys
+                            # (e.g. "['params']['stages'][0][0]['attn']['wq']")
         manifest.json       # step, tree paths, shapes, dtypes, crc32 per array
 
 Features required at fleet scale (and tested in tests/test_checkpoint.py):

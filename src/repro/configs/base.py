@@ -167,6 +167,11 @@ class RunConfig:
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
     remat: str = "none"              # none | full | pamm (save_only pamm_state + block outs)
+    block_structure: str = "residual"  # residual | reversible: two-stream revnet
+                                     # blocks whose backward reconstructs the
+                                     # residual stream instead of saving it
+                                     # (models/blocks.reversible_stage);
+                                     # train-time only, excludes remat!=none.
     attn_chunk: int = 1024           # query-block size for chunked attention
     loss_chunk: int = 1024           # sequence-block size for chunked cross-entropy
     lr: float = 3e-3

@@ -67,6 +67,13 @@ def main(argv=None):
                     choices=["none", "int8_ef"],
                     help="DP gradient all-reduce compression "
                          "(shard_map executor only)")
+    ap.add_argument("--block-structure", default="residual",
+                    choices=["residual", "reversible"],
+                    help="reversible = two-stream RevNet blocks whose "
+                         "backward reconstructs the residual stream instead "
+                         "of saving it (near-O(1) activation memory in "
+                         "depth; attn/moe/rec kinds only, incompatible "
+                         "with remat — see models/blocks.py)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -75,6 +82,7 @@ def main(argv=None):
         policy_name=args.policy, pamm_ratio=1.0 / args.ratio, lr=args.lr,
         compute_dtype="float32", param_dtype="float32",
         attn_kernel=args.attn_kernel, grad_compress=args.grad_compress,
+        block_structure=args.block_structure,
     )
     stream = SyntheticStream.for_arch(cfg, args.seq_len, args.global_batch)
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
@@ -146,6 +147,261 @@ def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
     else:
         raise ValueError(kind)
     return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# reversible two-stream blocks (RevNet / olmax `reversible` idiom)
+# ---------------------------------------------------------------------------
+BLOCK_STRUCTURES = ("residual", "reversible", "reversible_ref")
+
+# Kinds with the two-sublayer mixer/FFN split the F/G decomposition needs:
+#   y1 = x1 + F(x2)    F = norm1 -> attention / recurrence
+#   y2 = x2 + G(y1)    G = norm2 -> (Mo)FFN
+# ssm blocks are single-sublayer (stream 2 would never update), and xattn
+# threads cross-modal extras plus a learned gate through its FFN; both stay
+# residual-only.
+REVERSIBLE_KINDS = ("attn", "swa", "latt", "moe", "rec")
+
+
+def resolve_block_structure(cfg, rcfg) -> str:
+    """Validate ``rcfg.block_structure`` against the architecture and remat.
+
+    ``reversible_ref`` is the same two-stream math under plain autodiff
+    (every (y1, y2) carry is saved) — the parity and memory baseline for
+    the memory-saving custom_vjp path, not a setting for real runs.
+    """
+    structure = getattr(rcfg, "block_structure", "residual") or "residual"
+    if structure not in BLOCK_STRUCTURES:
+        raise ValueError(
+            f"RunConfig.block_structure={structure!r}: must be one of "
+            f"{BLOCK_STRUCTURES}")
+    if structure == "residual":
+        return structure
+    bad = sorted({k for unit, _ in cfg.stages for k in unit
+                  if k not in REVERSIBLE_KINDS})
+    if bad:
+        raise ValueError(
+            f"block_structure={structure!r} supports kinds "
+            f"{REVERSIBLE_KINDS}; stage kind(s) {bad} have no two-sublayer "
+            f"F/G split (ssm is single-sublayer, xattn consumes cross-modal "
+            f"extras). Use block_structure='residual' for this architecture.")
+    if rcfg.remat != "none":
+        raise ValueError(
+            f"remat={rcfg.remat!r} x block_structure={structure!r} is "
+            f"invalid: the reversible backward already reconstructs the "
+            f"residual stream from the stage outputs, and jax.checkpoint "
+            f"around the stage would re-save the very (y1, y2) carries it "
+            f"erases, then recompute F/G a second time on top. Use "
+            f"remat='none' with reversible blocks; remat='full'|'pamm' "
+            f"belongs to block_structure='residual'.")
+    return structure
+
+
+def block_f(kind, cfg, rcfg, ctx, params, x, positions, key):
+    """First reversible sublayer (token mixer): norm1 -> attn/recurrence.
+
+    Returns the pre-residual output; the caller forms ``y1 = x1 + F(x2)``.
+    """
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind in ("attn", "swa", "latt", "moe"):
+        out, _ = attn_lib.attn_train(
+            params["attn"], h, positions, cfg, ctx, key,
+            window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
+            flash_sdp=rcfg.flash_sdp, kernel=attn_lib.use_attn_kernel(rcfg),
+        )
+        return out
+    if kind == "rec":
+        return rglru_lib.rglru_train(params["rec"], h, cfg, ctx, key)
+    raise ValueError(f"kind {kind!r} has no reversible F sublayer")
+
+
+def block_g(kind, cfg, rcfg, ctx, params, y1, key):
+    """Second reversible sublayer: norm2 -> (Mo)FFN.
+
+    Returns ``(G(y1), aux_delta)``; the caller forms ``y2 = x2 + G(y1)``
+    and accumulates the (MoE balance) aux loss.
+    """
+    h2 = rms_norm(y1, params["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        return moe_lib.moe_ffn(params["ffn"], h2, cfg,
+                               gather_dispatch=rcfg.moe_gather_dispatch,
+                               token_blocks=rcfg.moe_token_blocks,
+                               ctx=ctx, key=key)
+    if kind in ("attn", "swa", "latt", "rec"):
+        return ffn_sites(params["ffn"], h2, ctx, key), jnp.float32(0)
+    raise ValueError(f"kind {kind!r} has no reversible G sublayer")
+
+
+def _rev_anchor(rcfg, t):
+    # Same block-boundary sharding anchors as the residual path (model.py):
+    # seq-sharded between blocks under Megatron SP, else batch-sharded and
+    # replicated over the model axis. No-op without a mesh in context.
+    from repro.runtime.sharding import maybe_constrain
+
+    if rcfg.seq_shard:
+        return maybe_constrain(t, ("batch", "ffn", None))
+    return maybe_constrain(t, ("batch", None, "embed"))
+
+
+def _two_sum(a, b):
+    """Knuth TwoSum: s = fl(a + b) and its exact rounding error e."""
+    s = a + b
+    z = s - a
+    e = (a - (s - z)) + (b - z)
+    return s, e
+
+
+def _dd_add(hi, lo, b):
+    """Compensated stream add: (hi, lo) + b -> renormalized (hi, lo).
+
+    The two-stream carries ride as double-word (hi, lo) pairs because the
+    naive revnet inverse ``x = (x + f) - f`` loses the rounding error of
+    the forward add — ~1 ulp per layer, compounding through the
+    layer-by-layer reconstruction and amplified ~10^3 x through the
+    attention vjps (measured ~1.5e-4 relative on f32 llama-tiny grads).
+    With the error term carried in ``lo``, add/subtract round-trips are
+    exact to O(eps^2) and the backward reconstructs the forward's hi
+    stream bit-for-bit. Sublayers consume only ``hi``; under plain
+    autodiff TwoSum's error channel has an exactly-zero jacobian, so
+    gradients flow as if the adds were plain — the custom bwd relies on
+    both properties.
+    """
+    s, e = _two_sum(hi, b)
+    return _two_sum(s, lo + e)
+
+
+def _rev_stage_primal(cfg, rcfg, unit, si, resolved, positions):
+    """Forward runner for one reversible stage: scan of two-stream layers."""
+
+    def body(carry, xs):
+        x1h, x1l, x2h, x2l, aux, tele = carry
+        bparams, kd = xs
+        k_r = jax.random.wrap_key_data(kd)
+        for bi, kind in enumerate(unit):
+            ctx = resolved.ctx(si, kind, tele)
+            bkey = jax.random.fold_in(k_r, bi)
+            f_out = block_f(kind, cfg, rcfg, ctx, bparams[bi], x2h,
+                            positions, bkey)
+            x1h, x1l = _dd_add(x1h, x1l, f_out)          # y1 = x1 + F(x2)
+            g_out, a = block_g(kind, cfg, rcfg, ctx, bparams[bi], x1h, bkey)
+            x2h, x2l = _dd_add(x2h, x2l, g_out)          # y2 = x2 + G(y1)
+            tele = ctx.tele
+            aux = aux + a
+            x1h, x1l = _rev_anchor(rcfg, x1h), _rev_anchor(rcfg, x1l)
+            x2h, x2l = _rev_anchor(rcfg, x2h), _rev_anchor(rcfg, x2l)
+        return (x1h, x1l, x2h, x2l, aux, tele), None
+
+    def primal(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data):
+        from repro.runtime.sharding import scan_compat
+
+        (x1h, x1l, x2h, x2l, aux, tele), _ = scan_compat(
+            body, (x1h, x1l, x2h, x2l, aux, tele), (unit_params, key_data))
+        return x1h, x1l, x2h, x2l, aux, tele
+
+    return primal
+
+
+def reversible_stage(cfg, rcfg, unit, si, resolved, unit_params,
+                     x1h, x1l, x2h, x2l, aux, tele, positions, key_data, *,
+                     save_memory: bool = True):
+    """Run one (unit x rep) stage of the two-stream reversible stack.
+
+    Streams are compensated (hi, lo) pairs — see :func:`_dd_add`.
+
+    ``save_memory=True`` wraps the whole stage scan in one ``jax.custom_vjp``
+    whose residuals are only the stage OUTPUT streams plus params/keys — no
+    per-layer residual-stream activation survives the forward pass (a
+    per-block vjp would not achieve this: ``lax.scan`` saves its carries
+    per iteration). The backward walks layers top-down (a ``reverse=True``
+    scan), reconstructs each layer's inputs exactly
+
+        x2 = y2 - G(y1)        then        x1 = y1 - F(x2)
+
+    and accumulates parameter cotangents with per-sublayer ``jax.vjp`` —
+    so the PAMM/compact custom_vjps and the Pallas flash bwd kernel run
+    inside the reconstruction exactly as they would under plain autodiff,
+    with one layer's activations live at a time.
+
+    ``save_memory=False`` ("reversible_ref") is the same math under plain
+    autodiff, used as the grad-parity and memory-accounting baseline.
+
+    ``key_data``: raw uint32 key data of the per-layer keys, shape
+    ``(rep, ...)`` — integer inputs take float0 cotangents through the
+    custom_vjp where a typed key array could not.
+    """
+    primal = _rev_stage_primal(cfg, rcfg, unit, si, resolved, positions)
+    if not save_memory:
+        return primal(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data)
+
+    @jax.custom_vjp
+    def run(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data):
+        return primal(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data)
+
+    def run_fwd(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data):
+        out = primal(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data)
+        y1h, y1l, y2h, y2l, _, _ = out
+        return out, (unit_params, y1h, y1l, y2h, y2l, key_data)
+
+    def run_bwd(res, cts):
+        from repro.runtime.sharding import scan_compat
+
+        unit_params, y1h, y1l, y2h, y2l, key_data = res
+        # TwoSum's error channel has a zero jacobian, so the lo outputs
+        # carry no gradient into the stage (dy1l/dy2l are dropped exactly
+        # as plain autodiff of the primal would), while the lo INPUTS feed
+        # the hi chain with coefficient 1 — dx?l equals the hi cotangent.
+        dy1, _dy1l, dy2, _dy2l, daux, dtele = cts
+
+        def back(carry, xs):
+            y1h, y1l, y2h, y2l, dy1, dy2 = carry
+            bparams, kd = xs
+            k_r = jax.random.wrap_key_data(kd)
+            dparams = [None] * len(unit)
+            for bi in reversed(range(len(unit))):
+                kind = unit[bi]
+                bkey = jax.random.fold_in(k_r, bi)
+                p = bparams[bi]
+
+                # Telemetry was already accumulated in the forward pass;
+                # the recompute uses a recording-free ctx.
+                def g_fn(p_, y1_, kind=kind, bkey=bkey):
+                    return block_g(kind, cfg, rcfg,
+                                   resolved.ctx(si, kind, None), p_, y1_, bkey)
+
+                # Reconstruct with a PLAIN primal call (the same jaxpr the
+                # forward traced), not jax.vjp's linearized primal — the
+                # partial-eval trace reorders the math enough that its
+                # output can drift ~1 ulp from the forward's, and drift
+                # compounds through the layer-by-layer reconstruction.
+                g_out, _a = g_fn(p, y1h)
+                x2h, x2l = _dd_add(y2h, y2l, -g_out)
+                _, g_vjp = jax.vjp(g_fn, p, y1h)
+                dpg, dy1_g = g_vjp((dy2, daux))
+                dy1 = dy1 + dy1_g
+
+                def f_fn(p_, x2_, kind=kind, bkey=bkey):
+                    return block_f(kind, cfg, rcfg,
+                                   resolved.ctx(si, kind, None), p_, x2_,
+                                   positions, bkey)
+
+                x1h, x1l = _dd_add(y1h, y1l, -f_fn(p, x2h))
+                _, f_vjp = jax.vjp(f_fn, p, x2h)
+                dpf, dx2_f = f_vjp(dy1)
+                dparams[bi] = jax.tree.map(jnp.add, dpg, dpf)
+                dy2 = dy2 + dx2_f
+                y1h, y1l = _rev_anchor(rcfg, x1h), _rev_anchor(rcfg, x1l)
+                y2h, y2l = _rev_anchor(rcfg, x2h), _rev_anchor(rcfg, x2l)
+            return (y1h, y1l, y2h, y2l, dy1, dy2), dparams
+
+        (_, _, _, _, dx1, dx2), dups = scan_compat(
+            back, (y1h, y1l, y2h, y2l, dy1, dy2), (unit_params, key_data),
+            reverse=True)
+        dkd = jax.tree.map(
+            lambda t: np.zeros(t.shape, dtype=jax.dtypes.float0), key_data)
+        return dups, dx1, dx1, dx2, dx2, daux, dtele, dkd
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(unit_params, x1h, x1l, x2h, x2l, aux, tele, key_data)
 
 
 def block_decode(kind, cfg, rcfg, params, x, positions, cache, extras):

@@ -163,6 +163,7 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
     tracers in the caller's trace.
     """
     resolved = plan_lib.as_resolved(plan, cfg, rcfg)
+    structure = blk.resolve_block_structure(cfg, rcfg)
     cdt, _ = _dtype(rcfg)
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
@@ -170,6 +171,29 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
     extras = _extras(cfg, batch, cdt)
     aux = jnp.float32(0)
     tele = resolved.zero_telemetry()
+
+    if structure != "residual":
+        # Reversible two-stream stack (DESIGN.md §3): both streams start at
+        # the embedding; the stage custom_vjp reconstructs (x1, x2) from
+        # (y1, y2) in backward, so no per-layer residual-stream activation
+        # is saved. Streams ride as compensated (hi, lo) pairs so the
+        # reconstruction is exact to O(eps^2) (blocks._dd_add). Embedding
+        # and head stay on the plain (residual) path.
+        zero = jnp.zeros_like(x)
+        x1h, x1l, x2h, x2l = x, zero, x, zero
+        for si, (unit, rep) in enumerate(cfg.stages):
+            stage_key = jax.random.fold_in(key, si)
+            kd = jax.random.key_data(jax.random.split(stage_key, rep))
+            x1h, x1l, x2h, x2l, aux, tele = blk.reversible_stage(
+                cfg, rcfg, unit, si, resolved, params["stages"][si],
+                x1h, x1l, x2h, x2l, aux, tele, positions, kd,
+                save_memory=(structure == "reversible"))
+        # revnet_out-style merge: average the streams before the head.
+        x = 0.5 * ((x1h + x1l) + (x2h + x2l))
+        if telemetry is not None:
+            telemetry.update(tele)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux
 
     for si, (unit, rep) in enumerate(cfg.stages):
         unit_params = params["stages"][si]
@@ -280,6 +304,16 @@ def loss_fn(cfg, rcfg, plan, params, batch, key):
 # ---------------------------------------------------------------------------
 # serving: prefill + decode
 # ---------------------------------------------------------------------------
+def _require_residual_serving(cfg, rcfg, fn_name: str):
+    if blk.resolve_block_structure(cfg, rcfg) != "residual":
+        raise NotImplementedError(
+            f"{fn_name} does not implement the reversible two-stream stack: "
+            f"block_structure='reversible' is a train-time activation-memory "
+            f"optimization, and a reversibly-trained model computes a "
+            f"different function than the residual stack. Score through "
+            f"forward()/loss_fn, or serve with a residual-trained model.")
+
+
 def init_caches(cfg, rcfg, B: int, max_len: int, *, n_kv_eff=None,
                 layout: str | None = None, page_size: int | None = None,
                 pool_pages: int | None = None, cache_plan=None):
@@ -351,6 +385,7 @@ def prefill(cfg, rcfg, params, batch, max_len: int, plan=None,
     (With causal attention, pad rows cannot perturb real rows; the serving
     cache splice masks their K/V out — serve/cache.mask_pad_rows.)
     """
+    _require_residual_serving(cfg, rcfg, "prefill")
     cdt, _ = _dtype(rcfg)
     resolved = None if plan is None else plan_lib.as_resolved(plan, cfg, rcfg)
     x = _embed(cfg, params, batch, cdt)
@@ -410,6 +445,7 @@ def decode_step(cfg, rcfg, params, tokens, pos, caches, extras_batch=None):
     l's logits match a sequential L = 1 run fed the same prefix exactly.
     Returns (logits (B, L, V*), new_caches).
     """
+    _require_residual_serving(cfg, rcfg, "decode_step")
     cdt, _ = _dtype(rcfg)
     if cfg.embed_inputs:
         x = tokens.astype(cdt)

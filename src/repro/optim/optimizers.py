@@ -75,8 +75,12 @@ def adamw_update(
         v2 = b2 * v + (1 - b2) * g32 * g32
         mhat = m2 / bc1
         vhat = v2 / bc2
-        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
-        p2 = p.astype(jnp.float32) - lr * s * delta
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        p32 = p.astype(jnp.float32)
+        # The per-path scale ``s`` (paper App. D) reduces only the Adam
+        # update for PAMM-wrapped weights; decoupled decay stays at the
+        # plain lr so wq/wk/wv are regularized like every other leaf.
+        p2 = p32 - lr * s * delta - lr * weight_decay * p32
         return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
 
     out = jax.tree.map(upd, grads, state.m, state.v, params, scales)
@@ -135,7 +139,10 @@ def adafactor_update(
         u = g32 / jnp.sqrt(vhat + eps)
         rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
         u = u / jnp.maximum(1.0, rms_u / clip_thresh)
-        p2 = p.astype(jnp.float32) - lr * s * (u + weight_decay * p.astype(jnp.float32))
+        p32 = p.astype(jnp.float32)
+        # As in adamw_update: ``s`` scales the update only, decay applies
+        # at the plain lr.
+        p2 = p32 - lr * s * u - lr * weight_decay * p32
         return p2.astype(p.dtype), r2, c2
 
     out = jax.tree.map(upd, grads, state.m, state.v, params, scales)

@@ -27,8 +27,13 @@ from repro.checkpoint import checkpointer as ckpt
 class StragglerWatchdog:
     threshold: float = 3.0
     window: int = 64
-    _times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=64))
+    _times: deque = dataclasses.field(default_factory=deque)
     slow_steps: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        # The running-median window is the ``window`` field, not a separate
+        # hardcoded bound — rebuild the deque so maxlen tracks it.
+        self._times = deque(self._times, maxlen=self.window)
 
     def observe(self, step: int, duration_s: float) -> bool:
         """Record a step; returns True if it was a straggler."""
@@ -96,22 +101,34 @@ def run_supervised(
         start = step
 
     step = start
+    # Steps between the restored checkpoint and the failure point re-execute
+    # after a restore; ``completed_steps`` must count each step ONCE, not
+    # once per replay, or throughput accounting inflates with every restart.
+    completed: set[int] = set()
+    # The first step after a restore recompiles the train step (new mesh /
+    # fresh process); its wall time is not a straggler signal and would
+    # poison the running median for the whole window.
+    skip_watchdog = latest is not None
     while step < total_steps:
         try:
             if injector is not None:
                 injector.maybe_fail(step)
             t0 = time.monotonic()
             step_fn(step)
-            if watchdog.observe(step, time.monotonic() - t0):
+            if skip_watchdog:
+                skip_watchdog = False
+            elif watchdog.observe(step, time.monotonic() - t0):
                 report.straggler_events += 1
+            completed.add(step)
+            report.completed_steps = len(completed)
             step += 1
-            report.completed_steps += 1
             if step % ckpt_every == 0 or step == total_steps:
                 manager.save_sync(step, state_provider())
         except Exception:
             report.restarts += 1
             if report.restarts > max_restarts:
                 raise
+            skip_watchdog = True
             latest = manager.latest_step()
             if latest is None:
                 step = 0  # no checkpoint yet: restart from scratch

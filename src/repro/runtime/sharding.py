@@ -274,7 +274,7 @@ def _shard_map_context():
     return getattr(_SM_CTX, "val", None)
 
 
-def scan_compat(body, carry, xs, *, length=None):
+def scan_compat(body, carry, xs, *, length=None, reverse=False):
     """``jax.lax.scan`` — unrolled to a Python loop when tracing inside a
     shard_map body (``shard_map_ctx`` active).
 
@@ -283,15 +283,20 @@ def scan_compat(body, carry, xs, *, length=None):
     partial-auto manual sharding (hlo_sharding_util.cc); unrolling trades
     HLO size linear in the scan length for a correct lowering. Outside a
     shard_map body this IS ``lax.scan``, bit for bit.
+
+    ``reverse=True`` matches ``lax.scan``'s contract: iterate xs from the
+    last slice to the first, with ys still stacked in input (index) order —
+    the reversible-block backward (models/blocks.reversible_stage) walks
+    layers top-down this way.
     """
     if _shard_map_context() is None:
-        return jax.lax.scan(body, carry, xs, length=length)
+        return jax.lax.scan(body, carry, xs, length=length, reverse=reverse)
     n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
-    ys = []
-    for i in range(n):
+    ys = [None] * n
+    order = range(n - 1, -1, -1) if reverse else range(n)
+    for i in order:
         xi = None if xs is None else jax.tree.map(lambda t: t[i], xs)
-        carry, y = body(carry, xi)
-        ys.append(y)
+        carry, ys[i] = body(carry, xi)
     if not ys or ys[0] is None:
         return carry, None
     import jax.numpy as jnp

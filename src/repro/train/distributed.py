@@ -162,6 +162,12 @@ def make_shard_map_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh,
     if gc not in GRAD_COMPRESS_SCHEMES:
         raise ValueError(
             f"unknown grad_compress {gc!r}; have {GRAD_COMPRESS_SCHEMES}")
+    from repro.models.blocks import resolve_block_structure
+
+    # Same config-time block_structure x remat x architecture gate as the
+    # jit executor — the reversible stage's custom_vjp runs inside the
+    # shard_map body, so invalid combos must fail before tracing.
+    resolve_block_structure(cfg, rcfg)
 
     data_axes = sh.data_axis_names(mesh)
     dp = sh.dp_degree(mesh)

@@ -133,6 +133,12 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh=None):
             f"--executor shard_map); the jit executor would silently train "
             f"uncompressed. Set grad_compress='none' or switch executor."
         )
+    from repro.models.blocks import resolve_block_structure
+
+    # Config-time resolution of block_structure x remat x architecture:
+    # an invalid combination (e.g. remat='full' with reversible blocks)
+    # fails here with a readable error, not at trace time.
+    resolve_block_structure(cfg, rcfg)
     resolved = resolve_for_run(cfg, rcfg, mesh=mesh)
     _, opt_update = make_optimizer(rcfg.optimizer)
     seed_key = jax.random.key(rcfg.seed)

@@ -151,3 +151,85 @@ def test_straggler_watchdog():
     assert wd.observe(16, 1.0)        # 10x median -> straggler
     assert not wd.observe(17, 0.12)
     assert len(wd.slow_steps) == 1
+
+
+def test_straggler_watchdog_respects_window():
+    """Regression: the median window is ``window``, not a hardcoded 64.
+
+    A slow early epoch must age out of a small window so the watchdog
+    tracks the RECENT regime; with the old fixed-64 deque the stale 1.0s
+    samples dominated the median and masked genuine stragglers.
+    """
+    wd = StragglerWatchdog(threshold=3.0, window=8)
+    for i in range(8):
+        wd.observe(i, 1.0)            # slow warm-up epoch
+    for i in range(8, 16):
+        wd.observe(i, 0.1)            # steady state
+    assert len(wd._times) == 8        # old samples evicted
+    assert wd.median() == pytest.approx(0.1)
+    # 0.4s is 4x the recent median -> straggler; under the stale 16-sample
+    # median (1.0) it would have been missed.
+    assert wd.observe(16, 0.4)
+
+
+def test_supervisor_counts_replayed_steps_once(tmp_path):
+    """Regression: completed_steps counts unique steps, not executions."""
+    state = {"x": jnp.zeros(())}
+    trace = []
+
+    def step_fn(step):
+        state["x"] = state["x"] + 1.0
+        trace.append(step)
+        return {}
+
+    report = run_supervised(
+        total_steps=12,
+        step_fn=step_fn,
+        state_provider=lambda: dict(state),
+        state_restorer=lambda t, s: state.update(t),
+        ckpt_root=str(tmp_path),
+        ckpt_every=5,
+        injector=FaultInjector(fail_at=(9,)),
+    )
+    assert report.restarts == 1
+    # steps 5..8 re-executed after the restore-to-5 ...
+    assert len(trace) > 12
+    # ... but the report counts each of 0..11 exactly once
+    assert report.completed_steps == 12
+
+
+def test_supervisor_excludes_post_restore_step_from_watchdog(tmp_path):
+    """Regression: the first step after a restore recompiles; its wall time
+    must not be fed to the straggler watchdog."""
+    import time as time_mod
+
+    state = {"x": jnp.zeros(())}
+    pending = {}
+
+    def step_fn(step):
+        # the restore handler arms one slow "recompilation" step
+        time_mod.sleep(0.25 if pending.pop("slow", False) else 0.01)
+        state["x"] = state["x"] + 1.0
+        return {}
+
+    def restorer(t, s):
+        state.update(t)
+        pending["slow"] = True
+
+    wd = StragglerWatchdog(threshold=3.0)
+    report = run_supervised(
+        total_steps=16,
+        step_fn=step_fn,
+        state_provider=lambda: dict(state),
+        state_restorer=restorer,
+        ckpt_root=str(tmp_path),
+        ckpt_every=4,
+        injector=FaultInjector(fail_at=(12,)),
+        watchdog=wd,
+    )
+    assert report.restarts == 1
+    assert report.completed_steps == 16
+    # the 0.25s replay of step 12 (25x the ~10ms median) was skipped, and
+    # skipping it also kept the median clean for steps 13..15
+    assert report.straggler_events == 0
+    assert wd.slow_steps == []

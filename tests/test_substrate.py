@@ -37,6 +37,42 @@ def test_adamw_decoupled_weight_decay():
     np.testing.assert_allclose(np.asarray(new_params["w"]), 2.0 - 0.1 * 0.1 * 2.0, atol=1e-5)
 
 
+def test_adamw_weight_decay_unscaled_on_pamm_leaves():
+    """Regression: decoupled decay applies at the PLAIN lr on wq/wk/wv.
+
+    The per-path PAMM scale (paper App. D) reduces the Adam *update* only;
+    the old code also multiplied the decay term by ``s``, under-regularizing
+    exactly the weights the paper trains at reduced rate. With zero grads
+    the update term vanishes, so both leaves must decay identically.
+    """
+    params = {"w": jnp.full((2,), 2.0), "wq": jnp.full((2,), 2.0)}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    st = adamw_init(params)
+    new_params, _ = adamw_update(
+        grads, st, params, lr=0.1, weight_decay=0.1, pamm_lr_scale=0.25
+    )
+    expected = 2.0 - 0.1 * 0.1 * 2.0
+    np.testing.assert_allclose(np.asarray(new_params["w"]), expected, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_params["wq"]), expected, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(new_params["wq"]), np.asarray(new_params["w"])
+    )
+
+
+def test_adafactor_weight_decay_unscaled_on_pamm_leaves():
+    params = {"w": jnp.full((4, 2), 2.0), "wq": jnp.full((4, 2), 2.0)}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    st = adafactor_init(params)
+    new_params, _ = adafactor_update(
+        grads, st, params, lr=0.1, weight_decay=0.1, pamm_lr_scale=0.25
+    )
+    expected = 2.0 - 0.1 * 0.1 * 2.0
+    np.testing.assert_allclose(np.asarray(new_params["w"]), expected, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(new_params["wq"]), np.asarray(new_params["w"])
+    )
+
+
 def test_adafactor_state_is_factored():
     params = {"w": jnp.ones((64, 32)), "b": jnp.ones((32,))}
     st = adafactor_init(params)
