@@ -1,0 +1,176 @@
+"""Ring context-parallel attention: per-device memory accounting and the
+max trainable context at a fixed per-device budget, cp = 1 vs 2 vs 4.
+
+The accounting is analytic and platform-independent (the reproduced
+quantity on this CPU container): with the sequence zigzag-sharded over cp
+devices, every per-device activation term that scales with L — the
+residual stream carries, the attention custom_vjp residuals (q, k, v, o,
+lse), and the ring's rotating kv buffers — scales with L/cp instead, so
+the max context at a fixed per-device byte budget grows ~linearly in cp.
+The timed rows run the real shard_map executor on forced host devices in
+a worker subprocess (same caveat as bench_scaling: fake devices share one
+CPU, read ratios not absolute tok/s).
+
+    python -m benchmarks.bench_ring_context             # via run()
+    python -m benchmarks.bench_ring_context --worker --mesh 1,1,2
+"""
+from __future__ import annotations
+
+import math
+import os
+import subprocess
+import sys
+import time
+
+ACCT_ARCH = "llama-350m"
+TIMED_ARCH = "llama-tiny"
+SEQ = 64
+GLOBAL_BATCH = 4
+STEPS = 4
+DEVICES = 8
+CP_SWEEP = (1, 2, 4)
+
+
+def per_device_activation_bytes(cfg, B: int, L: int, cp: int, *,
+                                bytes_per_el: int = 4) -> int:
+    """L-scaling activation bytes one device pins training a (B, L) batch
+    with the sequence sharded over ``cp``.
+
+    Counts the residual-stream carries (remat_full discipline: one (B,
+    Lc, d) carry per layer) plus the attention custom_vjp residuals per
+    layer ((q, k, v, o) and the f32 lse row statistic) plus one rotating
+    kv buffer pair for the ring (cp > 1; k/v chunks in flight during
+    rotation). Parameter/optimizer bytes are L-independent and excluded.
+    """
+    from benchmarks.bench_train_attn import attn_activation_bytes
+
+    Lc = L // cp
+    n_layers = sum(len(unit) * rep for unit, rep in cfg.stages)
+    stream = n_layers * B * Lc * cfg.d_model * bytes_per_el
+    attn = n_layers * attn_activation_bytes(cfg, B, Lc, backend="pallas",
+                                            bytes_per_el=bytes_per_el)
+    ring_kv = 0
+    if cp > 1:
+        ring_kv = 2 * B * Lc * cfg.n_kv_heads * cfg.head_dim * bytes_per_el
+    return stream + attn + ring_kv
+
+
+def max_trainable_context(cfg, budget_bytes: int, cp: int, *, B: int = 1,
+                          step: int = 256) -> int:
+    """Longest context (multiple of ``step``, and of the zigzag fold
+    ``2*cp``) fitting ``budget_bytes`` per device at context-parallel
+    degree ``cp``. Returns 0 if even one step does not fit."""
+    quantum = step * (2 * cp) // math.gcd(step, 2 * cp)
+    L = 0
+    while per_device_activation_bytes(cfg, B, L + quantum, cp) <= budget_bytes:
+        L += quantum
+    return L
+
+
+def _worker(mesh_shape: str) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import RunConfig, get_config
+    from repro.data import SyntheticStream
+    from repro.launch.mesh import make_debug_mesh
+    from repro.train import init_distributed_state, make_shard_map_train_step
+
+    data, model, cp = (int(x) for x in mesh_shape.split(","))
+    cfg = get_config(TIMED_ARCH)
+    rcfg = RunConfig(
+        compression="attn.qkv=pamm(r=1/8)", lr=3e-3,
+        compute_dtype="float32", param_dtype="float32",
+    )
+    mesh = make_debug_mesh(data, model, context=cp)
+    state, _ = init_distributed_state(cfg, rcfg, jax.random.key(0), mesh)
+    step = make_shard_map_train_step(cfg, rcfg, total_steps=STEPS, mesh=mesh)
+    stream = SyntheticStream.for_arch(cfg, SEQ, GLOBAL_BATCH)
+    batches = [
+        {k: jnp.asarray(v) for k, v in stream.get_batch(i).items()}
+        for i in range(STEPS)
+    ]
+    state, m = step(state, batches[0], jnp.int32(0))  # compile + warm
+    jax.block_until_ready(m["loss"])
+    t0 = time.monotonic()
+    for i in range(1, STEPS):
+        state, m = step(state, batches[i], jnp.int32(i))
+    jax.block_until_ready(m["loss"])
+    dt = (time.monotonic() - t0) / (STEPS - 1)
+    name = f"ring_step_d{data}m{model}cp{cp}"
+    print(f"{name},{dt * 1e6:.0f},tok_s={GLOBAL_BATCH * SEQ / dt:.0f};"
+          f"loss={float(m['loss']):.4f}", flush=True)
+
+
+def run(budget: str = "small") -> None:
+    from benchmarks import common
+    from repro.configs import get_config
+
+    cfg = get_config(ACCT_ARCH)
+    B = 1
+    budget_bytes = 512 * 2**20
+    ctx = {}
+    for cp in CP_SWEEP:
+        ctx[cp] = max_trainable_context(cfg, budget_bytes, cp, B=B)
+        mb = per_device_activation_bytes(cfg, B, ctx[cp], cp) / 2**20
+        common.emit(f"ring_max_ctx[cp={cp}]", ctx[cp],
+                    f"arch={ACCT_ARCH} B={B} max trainable context (tokens) "
+                    f"at {budget_bytes / 2**20:.0f} MB/device "
+                    f"({mb:.0f} MB used)")
+    gain = ctx[4] / ctx[1]
+    common.emit("ring_ctx_gain_cp4_over_cp1", gain,
+                f"arch={ACCT_ARCH} max-context ratio cp=4 / cp=1 at fixed "
+                f"per-device budget (~linear in cp)")
+    common.note(f"[ring_context] {ACCT_ARCH}: {ctx[1]} -> {ctx[4]} tokens "
+                f"from cp=1 -> cp=4 at {budget_bytes / 2**20:.0f} MB/device "
+                f"({gain:.2f}x)")
+    assert gain >= 3.0, (
+        f"ring max-context gain {gain:.2f}x < 3x from cp=1 -> cp=4")
+
+    # timed rows: real shard_map executor per mesh shape, worker subprocess
+    # (forced host devices must be set before jax initializes)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={DEVICES}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    shapes = ["1,1,1", "1,1,2"] if budget == "small" else \
+             ["1,1,1", "1,1,2", "2,1,2", "1,1,4"]
+    for shape in shapes:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_ring_context",
+             "--worker", "--mesh", shape],
+            capture_output=True, text=True, env=env, cwd=root, timeout=900,
+        )
+        out = proc.stdout.strip()
+        if proc.returncode != 0 or not out:
+            tail = (proc.stderr or "").strip().splitlines()[-1:] or ["?"]
+            common.emit(f"ring_step_{shape.replace(',', 'x')}", 0.0,
+                        f"ERROR:{tail[0][:120]}")
+            continue
+        for line in out.splitlines():
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+            common.emit(name, float(us or 0.0), derived)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--mesh", default="1,1,2")
+    ap.add_argument("--budget", default="small")
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.mesh)
+    else:
+        run(budget=args.budget)
+
+
+if __name__ == "__main__":
+    main()

@@ -84,6 +84,8 @@ def run(budget: str = "small") -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    from benchmarks import common
+
     for shape in shapes:
         schemes = ["none"] if shape.startswith("1,") else ["none", "int8_ef"]
         for gc in schemes:
@@ -95,10 +97,19 @@ def run(budget: str = "small") -> None:
             out = proc.stdout.strip()
             if proc.returncode != 0 or not out:
                 tail = (proc.stderr or "").strip().splitlines()[-1:] or ["?"]
-                print(f"scaling_{shape.replace(',', 'x')}_{gc},0.0,"
-                      f"ERROR:{tail[0][:120]}", flush=True)
-            else:
-                print(out, flush=True)
+                common.emit(f"scaling_{shape.replace(',', 'x')}_{gc}", 0.0,
+                            f"ERROR:{tail[0][:120]}")
+                continue
+            # The worker prints ``name,us,derived`` CSV to its own stdout —
+            # a separate process, so its rows never reach this process's
+            # common._RESULTS. Re-emit them here so run.py persists the
+            # harness as BENCH_multidevice_scaling.json like every other.
+            for line in out.splitlines():
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+                common.emit(name, float(us or 0.0), derived)
 
 
 def main() -> None:

@@ -33,6 +33,7 @@ HARNESSES = [
     ("serving_disagg", "benchmarks.bench_serving:run_disagg"),
     ("serving_prefix_shared", "benchmarks.bench_serving:run_prefix_shared"),
     ("multidevice_scaling", "benchmarks.bench_scaling"),
+    ("ring_context", "benchmarks.bench_ring_context"),
     ("roofline_dryrun", "benchmarks.roofline"),
 ]
 

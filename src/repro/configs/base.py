@@ -173,6 +173,11 @@ class RunConfig:
                                      # (models/blocks.reversible_stage);
                                      # train-time only, excludes remat!=none.
     attn_chunk: int = 1024           # query-block size for chunked attention
+    ring_block: int = 0              # bq=bk tile size for ring context-parallel
+                                     # attention chunk pairs (0 = the flash
+                                     # kernel default, 128); small shard
+                                     # chunks clamp it internally, so this
+                                     # only matters for tuning long shards
     loss_chunk: int = 1024           # sequence-block size for chunked cross-entropy
     lr: float = 3e-3
     pamm_lr_scale: float = 0.25      # paper App. D: PAMM-wrapped weights use alpha*lr

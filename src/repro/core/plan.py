@@ -399,10 +399,12 @@ def _mesh_data_degree(mesh) -> int:
     if mesh is None:
         return 1
     # single source of truth with the shard_map executor: blocks=auto must
-    # resolve to the same degree the executor shards/splits keys over
-    from repro.runtime.sharding import dp_degree
+    # resolve to the same degree the executor shards/splits keys over —
+    # data x context, since each (data, context) coordinate compresses its
+    # own (batch slice, sequence slice) block with its own key stream
+    from repro.runtime.sharding import cp_degree, dp_degree
 
-    return dp_degree(mesh)
+    return dp_degree(mesh) * cp_degree(mesh)
 
 
 def _default_backend() -> str:

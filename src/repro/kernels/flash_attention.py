@@ -46,11 +46,21 @@ DENOM_FLOOR = 1e-30
 
 
 def _tile_mask(iq, jk, bq: int, bk: int, *, causal: bool, window: int,
-               lreal: int):
-    """Validity mask of one (bq, bk) score tile — shared fwd/bwd."""
-    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kpos < lreal  # exclude zero-padded keys
+               lreal: int, q_off=0, k_off=0):
+    """Validity mask of one (bq, bk) score tile — shared fwd/bwd.
+
+    ``q_off``/``k_off`` shift the causal/window comparisons to GLOBAL
+    positions (ring context parallelism hands each kernel call one
+    sequence chunk whose rows start at a nonzero offset; they may be
+    traced scalars). The padded-key exclusion stays in LOCAL coordinates
+    — ``lreal`` is the chunk's real length regardless of where it sits
+    in the global sequence. Python-int zeros fold away, so the default
+    path is bit-identical to the offset-free kernel.
+    """
+    qpos = q_off + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kloc = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kloc < lreal  # exclude zero-padded keys (local coordinate)
+    kpos = k_off + kloc
     if causal:
         mask = mask & (kpos <= qpos)
     if window > 0:
@@ -58,19 +68,22 @@ def _tile_mask(iq, jk, bq: int, bk: int, *, causal: bool, window: int,
     return mask
 
 
-def _tile_live(iq, jk, bq: int, bk: int, *, causal: bool, window: int):
+def _tile_live(iq, jk, bq: int, bk: int, *, causal: bool, window: int,
+               q_off=0, k_off=0):
     """False iff the (iq, jk) tile is *entirely* masked, so its MXU work
     can be skipped — with causal masking that is ~half the grid (tiles
     above the diagonal), and a sliding window additionally kills tiles
     far below it. Skipped tiles contributed exact zeros (p underflows),
-    so guarding compute with this is bit-identical."""
+    so guarding compute with this is bit-identical. Offsets as in
+    :func:`_tile_mask` (the predicate is already dynamic — program ids
+    are traced — so traced offsets change nothing structurally)."""
     live = None
     if causal:
         # live iff the tile's first key position <= its last query position
-        live = jk * bk <= iq * bq + (bq - 1)
+        live = k_off + jk * bk <= q_off + iq * bq + (bq - 1)
     if window > 0:
         # live iff the tile's last key position is inside some row's window
-        in_window = jk * bk + (bk - 1) > iq * bq - window
+        in_window = k_off + jk * bk + (bk - 1) > q_off + iq * bq - window
         live = in_window if live is None else live & in_window
     return jnp.bool_(True) if live is None else live
 
@@ -78,9 +91,14 @@ def _tile_live(iq, jk, bq: int, bk: int, *, causal: bool, window: int):
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
-                *, bq: int, bk: int, nk: int, causal: bool, window: int,
-                scale: float, lreal: int):
+def _fwd_kernel(*refs, bq: int, bk: int, nk: int, causal: bool, window: int,
+                scale: float, lreal: int, offset: bool = False):
+    if offset:
+        offs_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+        qo, ko = offs_ref[0], offs_ref[1]
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+        qo = ko = 0
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -90,7 +108,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window))
+    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window,
+                        q_off=qo, k_off=ko))
     def _compute():
         q = q_ref[0].astype(jnp.float32)      # (bq, dh)
         k = k_ref[0].astype(jnp.float32)      # (bk, dh)
@@ -99,7 +118,7 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                              # (bq, bk)
         mask = _tile_mask(iq, jk, bq, bk, causal=causal, window=window,
-                          lreal=lreal)
+                          lreal=lreal, q_off=qo, k_off=ko)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]                    # (bq, 1)
@@ -122,9 +141,15 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
 # ---------------------------------------------------------------------------
 # backward: dq (q-major grid)
 # ---------------------------------------------------------------------------
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               acc_ref, *, bq: int, bk: int, nk: int, causal: bool,
-               window: int, scale: float, lreal: int):
+def _dq_kernel(*refs, bq: int, bk: int, nk: int, causal: bool,
+               window: int, scale: float, lreal: int, offset: bool = False):
+    if offset:
+        offs_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, \
+            acc_ref = refs
+        qo, ko = offs_ref[0], offs_ref[1]
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, acc_ref = refs
+        qo = ko = 0
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -132,7 +157,8 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window))
+    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window,
+                        q_off=qo, k_off=ko))
     def _compute():
         q = q_ref[0].astype(jnp.float32)       # (bq, dh)
         k = k_ref[0].astype(jnp.float32)       # (bk, dh)
@@ -142,7 +168,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
         mask = _tile_mask(iq, jk, bq, bk, causal=causal, window=window,
-                          lreal=lreal)
+                          lreal=lreal, q_off=qo, k_off=ko)
         s = jnp.where(mask, s, NEG_INF)
         p = jnp.exp(s - lse_ref[...].reshape(bq, 1))             # (bq, bk)
         dp = jax.lax.dot_general(
@@ -161,9 +187,17 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 # ---------------------------------------------------------------------------
 # backward: dk/dv (kv-major grid, GQA head folding)
 # ---------------------------------------------------------------------------
-def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
-                dv_ref, dk_acc, dv_acc, *, bq: int, bk: int, nq: int, G: int,
-                causal: bool, window: int, scale: float, lreal: int):
+def _dkv_kernel(*refs, bq: int, bk: int, nq: int, G: int,
+                causal: bool, window: int, scale: float, lreal: int,
+                offset: bool = False):
+    if offset:
+        offs_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, \
+            dv_ref, dk_acc, dv_acc = refs
+        qo, ko = offs_ref[0], offs_ref[1]
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, \
+            dk_acc, dv_acc = refs
+        qo = ko = 0
     g = pl.program_id(2)
     iq = pl.program_id(3)
     jk = pl.program_id(1)
@@ -173,7 +207,8 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window))
+    @pl.when(_tile_live(iq, jk, bq, bk, causal=causal, window=window,
+                        q_off=qo, k_off=ko))
     def _compute():
         q = q_ref[0].astype(jnp.float32)       # (bq, dh)
         k = k_ref[0].astype(jnp.float32)       # (bk, dh)
@@ -183,7 +218,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
         mask = _tile_mask(iq, jk, bq, bk, causal=causal, window=window,
-                          lreal=lreal)
+                          lreal=lreal, q_off=qo, k_off=ko)
         s = jnp.where(mask, s, NEG_INF)
         p = jnp.exp(s - lse_ref[...].reshape(bq, 1))         # (bq, bk)
         dv_acc[...] += jax.lax.dot_general(                  # pᵀ dO -> (bk, dh)
@@ -225,7 +260,12 @@ def _fold_heads(x, pad_len: int, pdh: int):
     return x.transpose(0, 2, 1, 3).reshape(B * N, L + pad_len, dh + pdh)
 
 
-def _fwd_impl(q, k, v, causal, window, bq, bk, interpret):
+def _fwd_impl(q, k, v, causal, window, bq, bk, interpret, offs=None):
+    """``offs``: optional (2,) int32 ``[q_off, k_off]`` — global position
+    offsets of the q and kv chunks (traced; ring context parallelism).
+    They ride as a scalar-prefetch operand so the mask/liveness math sees
+    global positions while the tiling stays chunk-local. ``offs=None`` is
+    the original plain-grid lowering, byte-identical to before."""
     B, L, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -239,40 +279,54 @@ def _fwd_impl(q, k, v, causal, window, bq, bk, interpret):
     nq, nk = Lqp // bq, Lkp // bk
     grid = (B * H, nq, nk)
 
-    def kv_index(bh, iq, jk):
+    def kv_index(bh, iq, jk, *_):
         # query stream bh = b * H + h; kv head = h // G
         return ((bh // H) * KV + (bh % H) // G, jk, 0)
 
-    out, lse = pl.pallas_call(
-        functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
-                          window=window, scale=scale, lreal=L),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-            pl.BlockSpec((1, bk, dhp), kv_index),
-            pl.BlockSpec((1, bk, dhp), kv_index),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-            pl.BlockSpec((1, bq), lambda bh, iq, jk: (bh, iq)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B * H, Lqp, dhp), q.dtype),
-            jax.ShapeDtypeStruct((B * H, Lqp), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, dhp), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qr, kr, vr)
+    kern = functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                             window=window, scale=scale, lreal=L,
+                             offset=offs is not None)
+    in_specs = [
+        pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk, *_: (bh, iq, 0)),
+        pl.BlockSpec((1, bk, dhp), kv_index),
+        pl.BlockSpec((1, bk, dhp), kv_index),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk, *_: (bh, iq, 0)),
+        pl.BlockSpec((1, bq), lambda bh, iq, jk, *_: (bh, iq)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B * H, Lqp, dhp), q.dtype),
+        jax.ShapeDtypeStruct((B * H, Lqp), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, dhp), jnp.float32),
+    ]
+    if offs is None:
+        out, lse = pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, scratch_shapes=scratch, interpret=interpret,
+        )(qr, kr, vr)
+    else:
+        out, lse = pl.pallas_call(
+            kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+                out_specs=out_specs, scratch_shapes=scratch),
+            out_shape=out_shape, interpret=interpret,
+        )(jnp.asarray(offs, jnp.int32), qr, kr, vr)
     out = out.reshape(B, H, Lqp, dhp).transpose(0, 2, 1, 3)[:, :L, :, :dh]
     lse = lse.reshape(B, H, Lqp)[:, :, :L]
     return out, lse
 
 
-def _bwd_impl(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
+def _bwd_impl(q, k, v, o, lse, do, causal, window, bq, bk, interpret,
+              offs=None):
+    """``offs``: optional (2,) int32 ``[q_off, k_off]`` scalar-prefetch
+    operand carrying global chunk positions (ring context parallelism);
+    ``None`` keeps the original plain-grid lowering."""
     B, L, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -291,65 +345,92 @@ def _bwd_impl(q, k, v, o, lse, do, causal, window, bq, bk, interpret):
     lser = jnp.pad(lse.reshape(B * H, L), ((0, 0), (0, pq)))
 
     nq, nk = Lqp // bq, Lkp // bk
+    offset = offs is not None
+    if offset:
+        offs = jnp.asarray(offs, jnp.int32)
 
-    def kv_index_q(bh, iq, jk):
+    def kv_index_q(bh, iq, jk, *_):
         return ((bh // H) * KV + (bh % H) // G, jk, 0)
 
-    dq = pl.pallas_call(
-        functools.partial(_dq_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
-                          window=window, scale=scale, lreal=L),
-        grid=(B * H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-            pl.BlockSpec((1, bk, dhp), kv_index_q),
-            pl.BlockSpec((1, bk, dhp), kv_index_q),
-            pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-            pl.BlockSpec((1, bq), lambda bh, iq, jk: (bh, iq)),
-            pl.BlockSpec((1, bq), lambda bh, iq, jk: (bh, iq)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk: (bh, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Lqp, dhp), q.dtype),
-        scratch_shapes=[pltpu.VMEM((bq, dhp), jnp.float32)],
-        interpret=interpret,
-    )(qr, kr, vr, dor, lser, delta)
+    dq_kern = functools.partial(_dq_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                                window=window, scale=scale, lreal=L,
+                                offset=offset)
+    dq_grid = (B * H, nq, nk)
+    dq_in_specs = [
+        pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk, *_: (bh, iq, 0)),
+        pl.BlockSpec((1, bk, dhp), kv_index_q),
+        pl.BlockSpec((1, bk, dhp), kv_index_q),
+        pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk, *_: (bh, iq, 0)),
+        pl.BlockSpec((1, bq), lambda bh, iq, jk, *_: (bh, iq)),
+        pl.BlockSpec((1, bq), lambda bh, iq, jk, *_: (bh, iq)),
+    ]
+    dq_out_specs = pl.BlockSpec((1, bq, dhp), lambda bh, iq, jk, *_: (bh, iq, 0))
+    dq_out_shape = jax.ShapeDtypeStruct((B * H, Lqp, dhp), q.dtype)
+    dq_scratch = [pltpu.VMEM((bq, dhp), jnp.float32)]
+    if offset:
+        dq = pl.pallas_call(
+            dq_kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=dq_grid, in_specs=dq_in_specs,
+                out_specs=dq_out_specs, scratch_shapes=dq_scratch),
+            out_shape=dq_out_shape, interpret=interpret,
+        )(offs, qr, kr, vr, dor, lser, delta)
+    else:
+        dq = pl.pallas_call(
+            dq_kern, grid=dq_grid, in_specs=dq_in_specs,
+            out_specs=dq_out_specs, out_shape=dq_out_shape,
+            scratch_shapes=dq_scratch, interpret=interpret,
+        )(qr, kr, vr, dor, lser, delta)
 
     # kv-major grid; the two inner dims (g, iq) sweep the query stream of
     # one kv head so dk/dv fold GQA inside the kernel's VMEM accumulators.
-    def q_index(bkv, jk, g, iq):
+    def q_index(bkv, jk, g, iq, *_):
         return ((bkv // KV) * H + (bkv % KV) * G + g, iq, 0)
 
-    def qrow_index(bkv, jk, g, iq):
+    def qrow_index(bkv, jk, g, iq, *_):
         return ((bkv // KV) * H + (bkv % KV) * G + g, iq)
 
-    def kv_index(bkv, jk, g, iq):
+    def kv_index(bkv, jk, g, iq, *_):
         return (bkv, jk, 0)
 
-    dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, bq=bq, bk=bk, nq=nq, G=G,
-                          causal=causal, window=window, scale=scale, lreal=L),
-        grid=(B * KV, nk, G, nq),
-        in_specs=[
-            pl.BlockSpec((1, bq, dhp), q_index),
-            pl.BlockSpec((1, bk, dhp), kv_index),
-            pl.BlockSpec((1, bk, dhp), kv_index),
-            pl.BlockSpec((1, bq, dhp), q_index),
-            pl.BlockSpec((1, bq), qrow_index),
-            pl.BlockSpec((1, bq), qrow_index),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bk, dhp), kv_index),
-            pl.BlockSpec((1, bk, dhp), kv_index),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B * KV, Lkp, dhp), k.dtype),
-            jax.ShapeDtypeStruct((B * KV, Lkp, dhp), v.dtype),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bk, dhp), jnp.float32),
-            pltpu.VMEM((bk, dhp), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qr, kr, vr, dor, lser, delta)
+    dkv_kern = functools.partial(_dkv_kernel, bq=bq, bk=bk, nq=nq, G=G,
+                                 causal=causal, window=window, scale=scale,
+                                 lreal=L, offset=offset)
+    dkv_grid = (B * KV, nk, G, nq)
+    dkv_in_specs = [
+        pl.BlockSpec((1, bq, dhp), q_index),
+        pl.BlockSpec((1, bk, dhp), kv_index),
+        pl.BlockSpec((1, bk, dhp), kv_index),
+        pl.BlockSpec((1, bq, dhp), q_index),
+        pl.BlockSpec((1, bq), qrow_index),
+        pl.BlockSpec((1, bq), qrow_index),
+    ]
+    dkv_out_specs = [
+        pl.BlockSpec((1, bk, dhp), kv_index),
+        pl.BlockSpec((1, bk, dhp), kv_index),
+    ]
+    dkv_out_shape = [
+        jax.ShapeDtypeStruct((B * KV, Lkp, dhp), k.dtype),
+        jax.ShapeDtypeStruct((B * KV, Lkp, dhp), v.dtype),
+    ]
+    dkv_scratch = [
+        pltpu.VMEM((bk, dhp), jnp.float32),
+        pltpu.VMEM((bk, dhp), jnp.float32),
+    ]
+    if offset:
+        dk, dv = pl.pallas_call(
+            dkv_kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=dkv_grid, in_specs=dkv_in_specs,
+                out_specs=dkv_out_specs, scratch_shapes=dkv_scratch),
+            out_shape=dkv_out_shape, interpret=interpret,
+        )(offs, qr, kr, vr, dor, lser, delta)
+    else:
+        dk, dv = pl.pallas_call(
+            dkv_kern, grid=dkv_grid, in_specs=dkv_in_specs,
+            out_specs=dkv_out_specs, out_shape=dkv_out_shape,
+            scratch_shapes=dkv_scratch, interpret=interpret,
+        )(qr, kr, vr, dor, lser, delta)
 
     def unfold(x, N, Lp):
         return x.reshape(B, N, Lp, dhp).transpose(0, 2, 1, 3)[:, :L, :, :dh]

@@ -22,10 +22,11 @@ from repro.kernels.flash_decode import (  # re-export
     flash_decode,
     flash_paged_decode,
 )
+from repro.kernels.ring_attention import ring_attention  # re-export
 
 __all__ = ["pamm_compress", "pamm_apply", "flash_attention",
            "flash_attention_fwd", "flash_decode", "flash_paged_decode",
-           "on_tpu"]
+           "ring_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:

@@ -1,0 +1,392 @@
+"""Ring context-parallel attention around the flash kernels.
+
+Shards the sequence axis over a ``cp``-way mesh axis: each device keeps
+its q shard resident, k/v shards rotate around the ring via
+``jax.lax.ppermute``, and per-step partial ``(o, lse)`` pairs merge with
+the NEG_INF-safe online-softmax max-merge — so the math is the plain
+softmax over the full sequence, evaluated one kv shard at a time.
+
+Zigzag (fold-in-half) sharding balances causal work: the global sequence
+splits into ``2*cp`` chunks of ``C = L / (2*cp)`` and device ``i`` owns
+chunks ``(i, 2*cp-1-i)`` — an equal mix of early and late positions, so
+no device's causal mask kills all (or none) of its ring steps. A shard
+is therefore two *non-contiguous* chunks; every ring step decomposes
+into the 4 (q-chunk, kv-chunk) pairs, each evaluated at its own global
+position offsets and skipped entirely (``ring_pair_live``) when
+causality or the sliding window proves the whole pair masked.
+
+Offsets ride the ring: rather than deriving the kv owner's position from
+``axis_index`` (which does not lower under partial-auto ``shard_map`` on
+CPU), each shard's chunk offsets travel with its k/v through the same
+``ppermute`` — after ``s`` rotations a device holds kv (and offsets)
+from shard ``(i - s) % cp``.
+
+Backward runs one co-rotation: ``(k, v, dk_acc, dv_acc, offsets)``
+rotate together for exactly ``cp`` steps (a full circle), so dk/dv
+accumulators arrive home at the shard that owns those keys; dq
+accumulates locally. Per-pair gradients reuse the flash backward with
+the *merged* (o, lse) — a partial ``p = exp(s - lse_global)`` is the
+exact global probability restricted to that kv chunk, so per-pair
+``delta = rowsum(dO . O_global)`` and the pair gradients sum to the
+full-sequence gradient with no correction term.
+
+All of it sits under one ``custom_vjp`` so ``jax.grad`` through the
+training step never unrolls the ring into saved activations: residuals
+are FlashAttention-2's ``(q, k, v, o, lse)`` per shard — O(L/cp) per
+device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import (
+    DEFAULT_BK,
+    DEFAULT_BQ,
+    DENOM_FLOOR,
+    NEG_INF,
+    _bwd_impl,
+    _fwd_impl,
+)
+
+__all__ = [
+    "RingSpec",
+    "ring_attention",
+    "ring_pair_live",
+    "zigzag_permutation",
+    "zigzag_inverse_permutation",
+    "zigzag_shard_positions",
+]
+
+
+# ---------------------------------------------------------------------------
+# zigzag layout
+# ---------------------------------------------------------------------------
+def zigzag_permutation(L: int, cp: int) -> np.ndarray:
+    """Index permutation putting the zigzag layout into contiguous shards.
+
+    ``x[perm]`` reorders a length-``L`` sequence so that the ``i``-th
+    contiguous slice of ``L // cp`` tokens holds global chunks
+    ``(i, 2*cp - 1 - i)`` — apply on the host/global side before the
+    sequence axis is sharded, so each device's plain slice IS its zigzag
+    shard. Labels and masks permute identically (token-wise losses are
+    permutation invariant).
+    """
+    if L % (2 * cp):
+        raise ValueError(f"L={L} not divisible by 2*cp={2 * cp}")
+    C = L // (2 * cp)
+    order = []
+    for i in range(cp):
+        order.extend([i, 2 * cp - 1 - i])
+    return np.concatenate([np.arange(c * C, (c + 1) * C) for c in order])
+
+
+def zigzag_inverse_permutation(L: int, cp: int) -> np.ndarray:
+    """Inverse of :func:`zigzag_permutation` (restores global order)."""
+    perm = zigzag_permutation(L, cp)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(L)
+    return inv
+
+
+def zigzag_shard_positions(shard, L: int, cp: int):
+    """Global positions (length ``L // cp``, int32) owned by ``shard``.
+
+    ``shard`` may be traced (it comes from a sharded iota inside
+    shard_map). Feed this to RoPE and to the ring's mask offsets.
+    """
+    C = L // (2 * cp)
+    lo = shard * C + jnp.arange(C, dtype=jnp.int32)
+    hi = (2 * cp - 1 - shard) * C + jnp.arange(C, dtype=jnp.int32)
+    return jnp.concatenate([lo, hi])
+
+
+# ---------------------------------------------------------------------------
+# pair-level liveness
+# ---------------------------------------------------------------------------
+def ring_pair_live(q_off, k_off, C: int, *, causal: bool, window: int):
+    """False iff the whole (q-chunk, kv-chunk) score block is masked.
+
+    Chunk-granular twin of the kernel's ``_tile_live``: q rows span
+    ``[q_off, q_off + C)`` and keys ``[k_off, k_off + C)``. Dead pairs
+    are pruned *before* the kernel launch — with zigzag causal sharding
+    that removes ~half the pairs instead of merely skipping their tiles.
+    Correctness never depends on this predicate: a dead pair's masks
+    would produce an all-NEG_INF partial that the lse merge annihilates.
+    """
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_off <= q_off + (C - 1))
+    if window > 0:
+        live = live & (k_off + (C - 1) > q_off - window)
+    return live
+
+
+# ---------------------------------------------------------------------------
+# partial merge (online softmax across kv shards)
+# ---------------------------------------------------------------------------
+def _merge(o_a, lse_a, o_b, lse_b):
+    """Merge two attention partials over disjoint key sets.
+
+    o: (B, C, H, dh) f32, lse: (B, H, C) f32. NEG_INF-safe: when both
+    sides are dead (lse == NEG_INF) the weights become 1/2 each over
+    zero outputs — no NaN; a single dead side gets weight exp(NEG_INF -
+    m) == 0 exactly.
+    """
+    m = jnp.maximum(lse_a, lse_b)
+    wa = jnp.exp(lse_a - m)
+    wb = jnp.exp(lse_b - m)
+    tot = wa + wb
+    lse = m + jnp.log(tot)
+    # (B, H, C) -> (B, C, H, 1) to weight (B, C, H, dh)
+    ca = (wa / tot).transpose(0, 2, 1)[..., None]
+    cb = (wb / tot).transpose(0, 2, 1)[..., None]
+    return o_a * ca + o_b * cb, lse
+
+
+class RingSpec(NamedTuple):
+    """Static configuration of one ring attention call (nondiff arg)."""
+
+    axis_name: str
+    cp: int
+    causal: bool
+    window: int
+    bq: int
+    bk: int
+    use_kernel: bool
+    interpret: bool
+
+
+def _pair_fwd(q, k, v, q_off, k_off, spec: RingSpec):
+    """One (q-chunk, kv-chunk) partial: o (B, C, H, dh) f32, lse (B, H, C).
+
+    q: (B, C, H, dh), k/v: (B, C, KV, dh); offsets are traced scalars.
+    """
+    if spec.use_kernel:
+        o, lse = _fwd_impl(q, k, v, spec.causal, spec.window, spec.bq,
+                           spec.bk, spec.interpret,
+                           offs=jnp.stack([q_off, k_off]))
+        return o.astype(jnp.float32), lse
+    return _pair_fwd_ref(q, k, v, q_off, k_off, spec)
+
+
+def _pair_fwd_ref(q, k, v, q_off, k_off, spec: RingSpec):
+    """jnp oracle for one chunk pair (explicit global-position masks)."""
+    B, C, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, C, KV, G, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,blkd->bkgql", qf, kf) * scale  # (B, KV, G, C, C)
+    qpos = q_off + jnp.arange(C, dtype=jnp.int32)
+    kpos = k_off + jnp.arange(C, dtype=jnp.int32)
+    mask = jnp.bool_(jnp.ones((C, C)))
+    if spec.causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if spec.window > 0:
+        mask = mask & (qpos[:, None] - kpos[None, :] < spec.window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    # fully-masked rows: keep p = 0 instead of exp(0) = 1 garbage
+    p = jnp.where(m > NEG_INF / 2, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgql,blkd->bqkgd", p / jnp.maximum(l, DENOM_FLOOR), vf)
+    lse = m[..., 0] + jnp.log(jnp.maximum(l[..., 0], DENOM_FLOOR))
+    return o.reshape(B, C, H, dh), lse.reshape(B, H, C)
+
+
+def _pair_bwd(q, k, v, o, lse, do, q_off, k_off, spec: RingSpec):
+    """(dq, dk, dv) of one chunk pair against MERGED (o, lse).
+
+    With the global lse, ``p = exp(s - lse)`` is the exact slice of the
+    full-sequence probability row, so summing pair gradients over kv
+    chunks reproduces the single-device gradient exactly (delta =
+    rowsum(dO . O_global) is shared by every pair of a q chunk).
+    """
+    if spec.use_kernel:
+        return _bwd_impl(q, k, v, o, lse, do, spec.causal, spec.window,
+                         spec.bq, spec.bk, spec.interpret,
+                         offs=jnp.stack([q_off, k_off]))
+    B, C, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, C, KV, G, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32).reshape(B, C, KV, G, dh)
+    s = jnp.einsum("bqkgd,blkd->bkgql", qf, kf) * scale
+    qpos = q_off + jnp.arange(C, dtype=jnp.int32)
+    kpos = k_off + jnp.arange(C, dtype=jnp.int32)
+    mask = jnp.bool_(jnp.ones((C, C)))
+    if spec.causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if spec.window > 0:
+        mask = mask & (qpos[:, None] - kpos[None, :] < spec.window)
+    s = jnp.where(mask, s, NEG_INF)
+    lse_r = lse.reshape(B, KV, G, C)[..., None]          # (B, KV, G, C, 1)
+    p = jnp.exp(s - lse_r)                               # masked -> exp(-inf)=0
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    delta = delta.transpose(0, 2, 1).reshape(B, KV, G, C)[..., None]
+    dv = jnp.einsum("bkgql,bqkgd->blkd", p, dof)
+    dp = jnp.einsum("bqkgd,blkd->bkgql", dof, vf)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bkgql,blkd->bqkgd", ds, kf).reshape(B, C, H, dh)
+    dk = jnp.einsum("bkgql,bqkgd->blkd", ds, qf)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the ring (custom_vjp)
+# ---------------------------------------------------------------------------
+def _rotate(xs, axis_name: str, cp: int):
+    """Send to the next ring member: after s steps device i holds the
+    payload of shard (i - s) % cp."""
+    perm = [(i, (i + 1) % cp) for i in range(cp)]
+    return tuple(jax.lax.ppermute(x, axis_name, perm) for x in xs)
+
+
+def _chunks(x, C: int):
+    return x[:, :C], x[:, C:]
+
+
+def _fwd_ring(q, k, v, offs, spec: RingSpec):
+    """Full ring forward on one shard. q/k/v: (B, 2C, H|KV, dh); ``offs``
+    (2,) int32 = this shard's (low-chunk, high-chunk) global offsets.
+    Returns o (q.dtype) and lse (B, H, 2C) f32.
+    """
+    B, Lc, H, dh = q.shape
+    C = Lc // 2
+    o32 = jnp.zeros((B, Lc, H, dh), jnp.float32)
+    lse = jnp.full((B, H, Lc), NEG_INF, jnp.float32)
+    ko = offs
+    qa, qb = _chunks(q, C)
+
+    for s in range(spec.cp):
+        ka, kb = _chunks(k, C)
+        va, vb = _chunks(v, C)
+        for aq, (qc, qoff) in enumerate(((qa, offs[0]), (qb, offs[1]))):
+            for ak, (kc, vc, koff) in enumerate(((ka, va, ko[0]),
+                                                 (kb, vb, ko[1]))):
+                live = ring_pair_live(qoff, koff, C, causal=spec.causal,
+                                      window=spec.window)
+                po, plse = jax.lax.cond(
+                    live,
+                    lambda qc=qc, kc=kc, vc=vc, qoff=qoff, koff=koff:
+                        _pair_fwd(qc, kc, vc, qoff, koff, spec),
+                    lambda: (jnp.zeros((B, C, H, dh), jnp.float32),
+                             jnp.full((B, H, C), NEG_INF, jnp.float32)),
+                )
+                sl = slice(aq * C, (aq + 1) * C)
+                mo, mlse = _merge(o32[:, sl], lse[:, :, sl], po, plse)
+                o32 = o32.at[:, sl].set(mo)
+                lse = lse.at[:, :, sl].set(mlse)
+        if s != spec.cp - 1:
+            k, v, ko = _rotate((k, v, ko), spec.axis_name, spec.cp)
+
+    # rows dead across EVERY kv shard (possible only non-causal, e.g. a
+    # tight window with padding) must emit exact zeros, not 0/0 artifacts
+    dead = (lse <= NEG_INF / 2).transpose(0, 2, 1)[..., None]
+    o = jnp.where(dead, 0.0, o32).astype(q.dtype)
+    return o, lse
+
+
+def _bwd_ring(q, k, v, offs, o, lse, do, spec: RingSpec):
+    B, Lc, H, dh = q.shape
+    KV = k.shape[2]
+    C = Lc // 2
+    qa, qb = _chunks(q, C)
+    oa, ob = _chunks(o, C)
+    # zero dO on globally-dead rows so their (garbage) partials vanish
+    dead = (lse <= NEG_INF / 2).transpose(0, 2, 1)[..., None]
+    do = jnp.where(dead, 0.0, do.astype(jnp.float32)).astype(q.dtype)
+    doa, dob = _chunks(do, C)
+    lsea, lseb = lse[:, :, :C], lse[:, :, C:]
+
+    dq = jnp.zeros((B, Lc, H, dh), jnp.float32)
+    dk_rot = jnp.zeros((B, Lc, KV, dh), jnp.float32)
+    dv_rot = jnp.zeros((B, Lc, KV, dh), jnp.float32)
+    ko = offs
+
+    for s in range(spec.cp):
+        ka, kb = _chunks(k, C)
+        va, vb = _chunks(v, C)
+        for aq, (qc, oc, lc, dc, qoff) in enumerate((
+                (qa, oa, lsea, doa, offs[0]),
+                (qb, ob, lseb, dob, offs[1]))):
+            for ak, (kc, vc, koff) in enumerate(((ka, va, ko[0]),
+                                                 (kb, vb, ko[1]))):
+                live = ring_pair_live(qoff, koff, C, causal=spec.causal,
+                                      window=spec.window)
+                pdq, pdk, pdv = jax.lax.cond(
+                    live,
+                    lambda qc=qc, kc=kc, vc=vc, oc=oc, lc=lc, dc=dc,
+                           qoff=qoff, koff=koff:
+                        tuple(g.astype(jnp.float32) for g in _pair_bwd(
+                            qc, kc, vc, oc, lc, dc, qoff, koff, spec)),
+                    lambda: (jnp.zeros((B, C, H, dh), jnp.float32),
+                             jnp.zeros((B, C, KV, dh), jnp.float32),
+                             jnp.zeros((B, C, KV, dh), jnp.float32)),
+                )
+                dq = dq.at[:, aq * C:(aq + 1) * C].add(pdq)
+                ksl = slice(ak * C, (ak + 1) * C)
+                dk_rot = dk_rot.at[:, ksl].add(pdk)
+                dv_rot = dv_rot.at[:, ksl].add(pdv)
+        # rotate after EVERY step (cp rotations = full circle), carrying
+        # the accumulators with their kv — they end at the owning shard
+        k, v, dk_rot, dv_rot, ko = _rotate(
+            (k, v, dk_rot, dv_rot, ko), spec.axis_name, spec.cp)
+
+    return dq.astype(q.dtype), dk_rot.astype(k.dtype), dv_rot.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _ring(q, k, v, offs, spec: RingSpec):
+    out, _ = _fwd_ring(q, k, v, offs, spec)
+    return out
+
+
+def _ring_fwd(q, k, v, offs, spec: RingSpec):
+    out, lse = _fwd_ring(q, k, v, offs, spec)
+    return out, (q, k, v, offs, out, lse)
+
+
+def _ring_bwd(spec: RingSpec, res, do):
+    q, k, v, offs, out, lse = res
+    dq, dk, dv = _bwd_ring(q, k, v, offs, out, lse, do, spec)
+    d_offs = np.zeros(offs.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, d_offs
+
+
+_ring.defvjp(_ring_fwd, _ring_bwd)
+
+
+def ring_attention(q, k, v, positions, *, axis_name: str, cp: int,
+                   causal: bool = True, window: int = 0,
+                   bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                   use_kernel: bool = False, interpret: bool = True):
+    """Context-parallel attention over a zigzag-sharded sequence.
+
+    Call INSIDE ``shard_map`` with ``axis_name`` manual. q: (B, Lc, H,
+    dh) and k/v: (B, Lc, KV, dh) are this shard's two zigzag chunks
+    (Lc = L_global / cp, rows of chunk c at global positions
+    ``positions``); ``positions`` (B, Lc) int32 must be the zigzag
+    per-shard positions (row-constant over B). Differentiable —
+    ``jax.grad`` runs the ring backward with dk/dv returned to their
+    owning shards.
+    """
+    if q.shape[1] % 2:
+        raise ValueError(f"zigzag shard length {q.shape[1]} must be even")
+    C = q.shape[1] // 2
+    offs = jnp.stack([positions[0, 0], positions[0, C]]).astype(jnp.int32)
+    spec = RingSpec(axis_name=axis_name, cp=cp, causal=causal, window=window,
+                    bq=bq, bk=bk, use_kernel=use_kernel, interpret=interpret)
+    return _ring(q, k, v, offs, spec)

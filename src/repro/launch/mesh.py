@@ -34,6 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_debug_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over however many devices exist (tests/benches: 1 CPU)."""
+def make_debug_mesh(data: int = 1, model: int = 1, context: int = 1):
+    """Tiny mesh over however many devices exist (tests/benches: 1 CPU).
+
+    ``context > 1`` appends a context-parallel (ring attention) axis; the
+    two-axis shape is preserved otherwise so existing call sites and their
+    compiled artifacts are untouched."""
+    if context > 1:
+        return _make_mesh((data, model, context), ("data", "model", "context"))
     return _make_mesh((data, model), ("data", "model"))

@@ -57,6 +57,12 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--data-model", type=int, nargs=2, default=None,
                     metavar=("DATA", "MODEL"), help="debug mesh shape")
+    ap.add_argument("--mesh-context", type=int, default=1,
+                    help="context-parallel (ring attention) mesh degree: "
+                         "the sequence axis zigzag-shards over this many "
+                         "devices and k/v rotate via ppermute "
+                         "(shard_map executor only; seq-len must divide "
+                         "by 2x this)")
     ap.add_argument("--executor", default="jit", choices=["jit", "shard_map"],
                     help="jit = one GSPMD program (single-process default); "
                          "shard_map = explicit DP x TP executor "
@@ -75,6 +81,9 @@ def main(argv=None):
                          "depth; attn/moe/rec kinds only, incompatible "
                          "with remat — see models/blocks.py)")
     args = ap.parse_args(argv)
+    if args.mesh_context > 1 and args.executor != "shard_map":
+        ap.error("--mesh-context > 1 needs --executor shard_map (the ring's "
+                 "ppermute collectives require the manual context axis)")
 
     cfg = get_config(args.arch)
     rcfg = RunConfig(
@@ -89,11 +98,14 @@ def main(argv=None):
     mesh = None
     batch_sharding = None
     if args.executor == "shard_map":
-        # default mesh: all visible devices on the data axis
-        dm = args.data_model or (len(jax.devices()), 1)
-        mesh = make_debug_mesh(*dm)
+        # default mesh: all visible devices on the data axis (minus the
+        # context degree when ring attention is requested)
+        cp = max(1, args.mesh_context)
+        dm = args.data_model or (max(1, len(jax.devices()) // cp), 1)
+        mesh = make_debug_mesh(*dm, context=cp)
         sh.validate_batch_divisible(args.global_batch, mesh,
                                     grad_accum=rcfg.grad_accum, where="launch")
+        sh.validate_seq_divisible(args.seq_len, mesh, where="launch")
         state, specs = init_distributed_state(
             cfg, rcfg, jax.random.key(rcfg.seed), mesh)
         # already jitted with ZeRO-1 out_shardings + donated state

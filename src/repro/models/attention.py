@@ -39,6 +39,7 @@ from repro.kernels.flash_decode import (
     quantize_kv,
 )
 from repro.models.layers import P, apply_rope, dense_init, rms_norm
+from repro.runtime import sharding as sh
 from repro.runtime.sharding import maybe_constrain
 
 NEG_INF = -1e30
@@ -455,7 +456,8 @@ def sharded_paged_insert_quant(cache, k_new, v_new, positions, dh: int):
 # block-level entry points
 # ---------------------------------------------------------------------------
 def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
-               flash_sdp: bool = True, kernel: bool = False):
+               flash_sdp: bool = True, kernel: bool = False,
+               ring_block: int = 0):
     """Self-attention over a full sequence (training / prefill math).
 
     ``kernel=True`` runs the Pallas FlashAttention-2 fwd+bwd kernel pair
@@ -470,7 +472,19 @@ def attn_train(params, x, positions, cfg, ctx, key, *, window: int, chunk: int,
     q, k, v = _project_qkv(params, x, x, ctx, key, cfg, None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    if kernel:
+    ring = sh.ring_context()
+    if ring is not None:
+        # Context-parallel shard: this call sees one zigzag sequence shard;
+        # k/v rotate around the ring (kernels/ring_attention.py) and the
+        # global ``positions`` carry the causal/window masks across seams.
+        from repro.kernels.ops import on_tpu, ring_attention
+
+        axis_name, cp = ring
+        tile = {"bq": ring_block, "bk": ring_block} if ring_block else {}
+        out = ring_attention(q, k, v, positions, axis_name=axis_name, cp=cp,
+                             causal=True, window=window, use_kernel=kernel,
+                             interpret=not on_tpu(), **tile)
+    elif kernel:
         from repro.kernels.ops import flash_attention, on_tpu
 
         out = flash_attention(q, k, v, causal=True, window=window,

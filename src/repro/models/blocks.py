@@ -98,6 +98,7 @@ def block_train(kind, cfg, rcfg, ctx, params, x, positions, extras, key, aux,
             # RunConfig.attn_kernel governs the differentiated training
             # path and prefill alike.
             kernel=attn_lib.use_attn_kernel(rcfg),
+            ring_block=getattr(rcfg, "ring_block", 0),
         )
         x = x + out
         if want_cache:
@@ -163,8 +164,17 @@ BLOCK_STRUCTURES = ("residual", "reversible", "reversible_ref")
 REVERSIBLE_KINDS = ("attn", "swa", "latt", "moe", "rec")
 
 
-def resolve_block_structure(cfg, rcfg) -> str:
-    """Validate ``rcfg.block_structure`` against the architecture and remat.
+# Kinds a context-parallel (ring attention) mesh can shard over sequence:
+# attention kinds dispatch to the ring inside the shard_map body; moe's
+# mixer is attention too. rec/ssm are sequence-recurrent (a scan over L
+# cannot split across devices without a different parallelism scheme) and
+# xattn consumes full-sequence cross-modal extras.
+CONTEXT_PARALLEL_KINDS = ("attn", "swa", "latt", "moe")
+
+
+def resolve_block_structure(cfg, rcfg, *, cp: int = 1) -> str:
+    """Validate ``rcfg.block_structure`` against the architecture, remat,
+    and the executor's context-parallel degree ``cp``.
 
     ``reversible_ref`` is the same two-stream math under plain autodiff
     (every (y1, y2) carry is saved) — the parity and memory baseline for
@@ -175,6 +185,26 @@ def resolve_block_structure(cfg, rcfg) -> str:
         raise ValueError(
             f"RunConfig.block_structure={structure!r}: must be one of "
             f"{BLOCK_STRUCTURES}")
+    if cp > 1:
+        bad = sorted({k for unit, _ in cfg.stages for k in unit
+                      if k not in CONTEXT_PARALLEL_KINDS})
+        if bad:
+            raise ValueError(
+                f"context parallelism (cp={cp}) supports block kinds "
+                f"{CONTEXT_PARALLEL_KINDS}; stage kind(s) {bad} are "
+                f"sequence-recurrent or consume full-sequence extras and "
+                f"cannot shard over the sequence axis. Drop --mesh-context "
+                f"for this architecture.")
+        if structure != "residual":
+            raise ValueError(
+                f"block_structure={structure!r} x context parallelism "
+                f"(cp={cp}) is invalid: the reversible stage's custom_vjp "
+                f"re-runs F (which now contains the ring's ppermute "
+                f"collectives) during stream reconstruction, and the ring's "
+                f"own custom_vjp cannot nest inside that replay without "
+                f"re-synchronizing every shard per stage. Use "
+                f"block_structure='residual' with --mesh-context, or "
+                f"cp=1 with reversible blocks.")
     if structure == "residual":
         return structure
     bad = sorted({k for unit, _ in cfg.stages for k in unit
@@ -208,6 +238,7 @@ def block_f(kind, cfg, rcfg, ctx, params, x, positions, key):
             params["attn"], h, positions, cfg, ctx, key,
             window=_window_for(kind, cfg), chunk=rcfg.attn_chunk,
             flash_sdp=rcfg.flash_sdp, kernel=attn_lib.use_attn_kernel(rcfg),
+            ring_block=getattr(rcfg, "ring_block", 0),
         )
         return out
     if kind == "rec":

@@ -167,7 +167,14 @@ def forward(cfg, rcfg, plan, params, batch, key, *, telemetry: dict | None = Non
     cdt, _ = _dtype(rcfg)
     x = _embed(cfg, params, batch, cdt)
     B, L, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    # Context parallelism hands each shard a non-contiguous (zigzag) slice
+    # of the sequence; its global positions arrive in the batch and drive
+    # RoPE plus the causal/window masks across shard seams.
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    else:
+        positions = positions.astype(jnp.int32)
     extras = _extras(cfg, batch, cdt)
     aux = jnp.float32(0)
     tele = resolved.zero_telemetry()

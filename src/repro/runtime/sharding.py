@@ -214,6 +214,99 @@ def data_pspec(mesh: Mesh) -> PS:
     return PS(axes if len(axes) > 1 else axes[0])
 
 
+CONTEXT_AXIS = "context"
+
+
+def context_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh's context-parallel (sequence/ring) axes — ``('context',)``
+    when present, else ``()``."""
+    return tuple(a for a in (CONTEXT_AXIS,) if a in mesh.axis_names)
+
+
+def cp_degree(mesh: Mesh) -> int:
+    """Number of context-parallel (sequence) shards."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    deg = 1
+    for a in context_axis_names(mesh):
+        deg *= sizes[a]
+    return deg
+
+
+def sync_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    """Axes gradients / loss / metrics reduce over: data x context. Every
+    (data, context) coordinate computes the loss of a distinct (batch
+    slice, sequence slice) block, so the reduction set is their product."""
+    return data_axis_names(mesh) + context_axis_names(mesh)
+
+
+def batch_pspec(mesh: Mesh) -> PS:
+    """PartitionSpec for a (B, L, ...) batch leaf: batch over the data
+    axes, sequence over the context axis (identity when cp == 1)."""
+    daxes = data_axis_names(mesh)
+    d_entry = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    caxes = context_axis_names(mesh)
+    if not caxes:
+        return PS(d_entry)
+    return PS(d_entry, caxes[0])
+
+
+def shard_pspec(mesh: Mesh) -> PS:
+    """PartitionSpec sharding a leading per-shard axis over data x context
+    combined — the layout of error-feedback buffers and any other
+    per-replica state with one row per (data, context) coordinate."""
+    axes = sync_axis_names(mesh)
+    if not axes:
+        return PS()
+    return PS(axes if len(axes) > 1 else axes[0])
+
+
+def validate_seq_divisible(seq_len: int, mesh: Mesh, *, bq: int | None = None,
+                           where: str = "train step"):
+    """Raise a clear config-time error when the sequence length cannot
+    zigzag-shard over the context axis.
+
+    The hard constraint is ``seq_len % (2 * cp) == 0`` — zigzag folds the
+    sequence into ``2 * cp`` chunks (each device owns chunks ``i`` and
+    ``2cp-1-i``). The kernel's bq/bk tiling pads internally, so chunk
+    length need not be a bq multiple; when ``bq`` is given, lengths that
+    also make chunks a bq multiple are suggested (zero intra-kernel
+    padding), mirroring ``validate_batch_divisible``'s error shape."""
+    cp = cp_degree(mesh)
+    if cp <= 1:
+        return
+    fold = 2 * cp
+    if seq_len % fold:
+        lo = (seq_len // fold) * fold
+        hi = lo + fold
+        hint = ""
+        if bq:
+            step = fold * bq
+            zlo = (seq_len // step) * step
+            hint = (f" (for zero kernel padding, a multiple of cp*2*bq = "
+                    f"{step}, e.g. {zlo or step} or {zlo + step})")
+        raise ValueError(
+            f"{where}: seq_len {seq_len} is not divisible by 2*cp = {fold} "
+            f"(context axis {context_axis_names(mesh)} of degree {cp}; "
+            f"zigzag sharding folds the sequence into {fold} chunks). "
+            f"Nearest valid lengths: {lo or fold} or {hi}{hint}."
+        )
+
+
+def ring_context():
+    """(axis_name, cp) when tracing inside a shard_map body that manually
+    shards a context axis of degree > 1, else None — the dispatch point
+    for ring context-parallel attention (models/attention.attn_train)."""
+    sm = _shard_map_context()
+    if sm is None:
+        return None
+    mesh, manual = sm
+    if CONTEXT_AXIS not in manual:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cp = sizes.get(CONTEXT_AXIS, 1)
+    return (CONTEXT_AXIS, cp) if cp > 1 else None
+
+
 def slot_shard_entry(mesh: Mesh):
     """PartitionSpec ENTRY (not a full spec) for a per-slot / per-replica
     axis sharded over the data axes — what serve/cache.shard_slots puts on

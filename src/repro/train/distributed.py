@@ -116,7 +116,9 @@ def state_shardings(cfg, rcfg, mesh, *, n_kv_eff=None):
     )
     ef_sh = None
     if getattr(rcfg, "grad_compress", "none") == "int8_ef":
-        ef_ns = NamedSharding(mesh, sh.data_pspec(mesh))
+        # one EF row per (data, context) coordinate — under context
+        # parallelism every sequence shard quantizes its own gradient
+        ef_ns = NamedSharding(mesh, sh.shard_pspec(mesh))
         ef_sh = jax.tree.map(lambda _: ef_ns, shapes)
     return TrainState(params=param_sh, opt=opt_sh, ef=ef_sh), shapes, specs
 
@@ -135,10 +137,10 @@ def init_distributed_state(cfg, rcfg, key, mesh, *, n_kv_eff=None):
     opt = jax.device_put(state.opt, state_sh.opt)
     ef = None
     if getattr(rcfg, "grad_compress", "none") == "int8_ef":
-        dp = sh.dp_degree(mesh)
+        n_shards = sh.dp_degree(mesh) * sh.cp_degree(mesh)
         ef = jax.tree.map(
             lambda p, ns: jax.device_put(
-                jnp.zeros((dp,) + p.shape, jnp.float32), ns
+                jnp.zeros((n_shards,) + p.shape, jnp.float32), ns
             ),
             state.params, state_sh.ef,
         )
@@ -164,92 +166,136 @@ def make_shard_map_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh,
             f"unknown grad_compress {gc!r}; have {GRAD_COMPRESS_SCHEMES}")
     from repro.models.blocks import resolve_block_structure
 
-    # Same config-time block_structure x remat x architecture gate as the
-    # jit executor — the reversible stage's custom_vjp runs inside the
-    # shard_map body, so invalid combos must fail before tracing.
-    resolve_block_structure(cfg, rcfg)
-
     data_axes = sh.data_axis_names(mesh)
+    ctx_axes = sh.context_axis_names(mesh)
+    sync_axes = data_axes + ctx_axes
     dp = sh.dp_degree(mesh)
-    auto_axes = frozenset(a for a in mesh.axis_names if a not in data_axes)
+    cp = sh.cp_degree(mesh)
+    n_shards = dp * cp
+    auto_axes = frozenset(a for a in mesh.axis_names if a not in sync_axes)
     dspec = sh.data_pspec(mesh)
+    cspec = PS(ctx_axes[0]) if ctx_axes else PS()
+    bspec = sh.batch_pspec(mesh)
+    efspec = sh.shard_pspec(mesh)
 
-    # Mesh-resolved plan (backend + blocks=auto -> dp), localized per shard.
+    # Same config-time block_structure x remat x architecture gate as the
+    # jit executor, plus the cp decision table (reversible x ring and the
+    # sequence-recurrent kinds) — the reversible stage's custom_vjp and the
+    # ring's ppermute run inside the shard_map body, so invalid combos must
+    # fail before tracing.
+    resolve_block_structure(cfg, rcfg, cp=cp)
+
+    # Mesh-resolved plan (backend + blocks=auto -> dp x cp), localized per
+    # (data, context) shard.
     resolved_global = resolve_for_run(cfg, rcfg, mesh=mesh)
-    if dp > 1:
+    if n_shards > 1:
         odd = sorted({
             s.policy.n_blocks for s in resolved_global.compressed_sites
-            if isinstance(s.policy, PammPolicy) and s.policy.n_blocks != dp
+            if isinstance(s.policy, PammPolicy) and s.policy.n_blocks != n_shards
         })
         if odd:
             import warnings
 
             warnings.warn(
-                f"PAMM blocks={odd} != DP degree {dp}: the shard_map "
-                f"executor localizes blocks per shard with a different key "
-                f"chain than the jit executor's global blocked compress — "
-                f"training is valid but NOT sampling-compatible between "
-                f"executors. Use blocks=auto (= dp) for bit parity.",
+                f"PAMM blocks={odd} != shard count {n_shards} (dp {dp} x "
+                f"cp {cp}): the shard_map executor localizes blocks per "
+                f"shard with a different key chain than the jit executor's "
+                f"global blocked compress — training is valid but NOT "
+                f"sampling-compatible between executors. Use blocks=auto "
+                f"(= dp x cp) for bit parity.",
                 stacklevel=2,
             )
     resolved_base = resolved_global.map_policies(
-        lambda p: _localize_policy(p, dp)
+        lambda p: _localize_policy(p, n_shards)
     )
     _, opt_update = make_optimizer(rcfg.optimizer)
     seed_key = jax.random.key(rcfg.seed)
 
-    def shard_body(sid, key_data, params, ef, batch):
-        # sid is a (1,)-slice of arange(dp): this shard's data index. An
-        # input instead of lax.axis_index because XLA's SPMD partitioner
-        # cannot lower PartitionId under partial-auto shard_map on all
-        # backends (CPU included). The step key likewise enters as raw
-        # uint32 key data: a typed key array crossing the shard_map
-        # boundary trips GSPMD's sharding validation for extended dtypes.
-        with sh.shard_map_ctx(mesh, data_axes):
-            shard = sid[0]
+    def shard_body(sid, cid, key_data, params, ef, batch):
+        # sid / cid are (1,)-slices of arange(dp) / arange(cp): this
+        # shard's data and context indices. Inputs instead of
+        # lax.axis_index because XLA's SPMD partitioner cannot lower
+        # PartitionId under partial-auto shard_map on all backends (CPU
+        # included). The step key likewise enters as raw uint32 key data:
+        # a typed key array crossing the shard_map boundary trips GSPMD's
+        # sharding validation for extended dtypes.
+        with sh.shard_map_ctx(mesh, sync_axes):
+            shard = sid[0] * cp + cid[0]
             resolved = resolved_base
-            if dp > 1:
+            if n_shards > 1:
                 resolved = resolved_base.with_site_key_fn(
                     lambda key, site_id: shard_site_key(
-                        key, site_id, dp=dp, shard=shard)
+                        key, site_id, dp=n_shards, shard=shard)
                 )
+            if cp > 1:
+                # This shard sees a zigzag slice of the sequence (the
+                # global batch is zigzag-permuted below, so the contiguous
+                # context slice IS chunks (cid, 2cp-1-cid)); its global
+                # positions feed RoPE and the ring's seam-crossing masks.
+                from repro.kernels.ring_attention import zigzag_shard_positions
+
+                some = jax.tree.leaves(batch)[0]
+                B_loc, L_loc = some.shape[0], some.shape[1]
+                pos = zigzag_shard_positions(cid[0], L_loc * cp, cp)
+                batch = dict(batch)
+                batch["positions"] = jnp.broadcast_to(
+                    pos[None, :], (B_loc, L_loc))
             key = jax.random.wrap_key_data(key_data)
             loss, metrics, grads = loss_and_grad(
                 cfg, rcfg, resolved, params, batch, key
             )
             if gc == "int8_ef":
                 ef_loc = jax.tree.map(lambda e: e[0], ef)
-                grads, new_err = tree_compressed_psum(grads, ef_loc, data_axes)
+                grads, new_err = tree_compressed_psum(grads, ef_loc, sync_axes)
                 new_ef = jax.tree.map(lambda e: e[None], new_err)
             else:
                 grads = jax.tree.map(
-                    lambda g: jax.lax.pmean(g, data_axes), grads)
+                    lambda g: jax.lax.pmean(g, sync_axes), grads)
                 new_ef = ef
             # Aggregate telemetry across shards (don't report shard-0
             # numbers): the STATS_LEN vectors are sums/counts, so psum gives
             # global stored bytes, kept/total rows and beta sums.
             metrics = {
-                "nll": jax.lax.pmean(metrics["nll"], data_axes),
-                "aux": jax.lax.pmean(metrics["aux"], data_axes),
+                "nll": jax.lax.pmean(metrics["nll"], sync_axes),
+                "aux": jax.lax.pmean(metrics["aux"], sync_axes),
                 "sites": jax.tree.map(
-                    lambda v: jax.lax.psum(v, data_axes),
+                    lambda v: jax.lax.psum(v, sync_axes),
                     metrics.get("sites", {})),
             }
-            loss = jax.lax.pmean(loss, data_axes)
+            loss = jax.lax.pmean(loss, sync_axes)
             return loss, metrics, grads, new_ef
 
     grads_fn = shard_map(
         shard_body, mesh,
-        in_specs=(dspec, PS(), PS(), dspec, dspec),
-        out_specs=(PS(), PS(), PS(), dspec),
+        in_specs=(dspec, cspec, PS(), PS(), efspec, bspec),
+        out_specs=(PS(), PS(), PS(), efspec),
         check_rep=False, auto=auto_axes,
     )
 
+    seq_perm = None
+    if cp > 1:
+        from repro.kernels.ring_attention import zigzag_permutation
+
+        def permute_seq(b: dict) -> dict:
+            # Zigzag-reorder the sequence axis so each context shard's
+            # contiguous slice is its fold-in-half chunk pair (causal load
+            # balance). Labels/masks permute with their tokens; token-wise
+            # losses are permutation invariant, so metrics are unchanged.
+            L = jax.tree.leaves(b)[0].shape[1]
+            perm = zigzag_permutation(L, cp)
+            return {k: (v[:, perm] if v.ndim >= 2 and v.shape[1] == L else v)
+                    for k, v in b.items()}
+
+        seq_perm = permute_seq
+
     def train_step(state: TrainState, batch: dict, step: jax.Array):
         sid = jnp.arange(max(1, dp), dtype=jnp.int32)
+        cid = jnp.arange(max(1, cp), dtype=jnp.int32)
+        if seq_perm is not None:
+            batch = seq_perm(batch)
         key_data = jax.random.key_data(jax.random.fold_in(seed_key, step))
         loss, metrics, grads, new_ef = grads_fn(
-            sid, key_data, state.params, state.ef, batch)
+            sid, cid, key_data, state.params, state.ef, batch)
         # Post-sync grads are replicated over data: clip + optimizer run
         # under GSPMD, and the jit out_shardings below pin the ZeRO-1
         # layout, so XLA schedules reduce-scatter(update)/all-gather(params)
@@ -267,6 +313,9 @@ def make_shard_map_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh,
         )
 
     state_sh, _, _ = state_shardings(cfg, rcfg, mesh, n_kv_eff=n_kv_eff)
+    # The global batch enters data-sharded only; the zigzag permutation
+    # happens inside the jit, after which the context axis slices fall out
+    # of the shard_map in_specs.
     batch_sh = NamedSharding(mesh, dspec)
     jitted = jax.jit(
         train_step,
@@ -276,12 +325,15 @@ def make_shard_map_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh,
     )
 
     def step(state, batch, step_idx):
-        # Validate BEFORE jit commits the batch to the data axes — the
+        # Validate BEFORE jit commits the batch to the mesh — the
         # alternative is an opaque pjit "sharding does not evenly divide"
         # failure on the first uneven batch.
-        B = jax.tree.leaves(batch)[0].shape[0]
+        leaf = jax.tree.leaves(batch)[0]
         sh.validate_batch_divisible(
-            B, mesh, grad_accum=rcfg.grad_accum, where="shard_map train step")
+            leaf.shape[0], mesh, grad_accum=rcfg.grad_accum,
+            where="shard_map train step")
+        sh.validate_seq_divisible(
+            leaf.shape[1], mesh, where="shard_map train step")
         return jitted(state, batch, step_idx)
 
     return step

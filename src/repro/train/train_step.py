@@ -133,6 +133,18 @@ def make_train_step(cfg, rcfg, *, total_steps: int = 10000, mesh=None):
             f"--executor shard_map); the jit executor would silently train "
             f"uncompressed. Set grad_compress='none' or switch executor."
         )
+    if mesh is not None:
+        from repro.runtime import sharding as _sh
+
+        if _sh.cp_degree(mesh) > 1:
+            # Ring attention needs the context axis MANUAL (ppermute inside
+            # the shard_map body); under this executor GSPMD would have to
+            # invent the rotation schedule itself, which it cannot.
+            raise ValueError(
+                f"mesh has a context axis of degree {_sh.cp_degree(mesh)}, "
+                f"but the jit executor cannot run ring context-parallel "
+                f"attention; use the shard_map executor "
+                f"(--executor shard_map / make_shard_map_train_step).")
     from repro.models.blocks import resolve_block_structure
 
     # Config-time resolution of block_structure x remat x architecture:

@@ -30,15 +30,29 @@ FLASH_SETTINGS = dict(max_examples=8, deadline=None)
 
 
 @st.composite
-def flash_shapes(draw):
+def flash_shapes(draw, *, cp=False):
+    """Random flash-attention problem shapes.
+
+    With ``cp=True`` also draws a context-parallel degree in {2, 4} and
+    constrains L to a zigzag-shardable multiple of 2*cp (the ring's hard
+    divisibility gate); window draws relative to the chunk length so some
+    samples span shard seams and some kill whole ring pairs.
+    """
     B = draw(st.integers(1, 2))
-    L = draw(st.integers(2, 96))
     H = draw(st.sampled_from([1, 2, 4, 8]))
     KV = draw(st.sampled_from([d for d in (1, 2, 4, 8) if H % d == 0]))
     dh = draw(st.sampled_from([8, 16, 32, 64]))
     bq = draw(st.sampled_from([16, 32, 64]))
     bk = draw(st.sampled_from([16, 32, 64]))
     causal = draw(st.booleans())
+    if cp:
+        deg = draw(st.sampled_from([2, 4]))
+        C = draw(st.sampled_from([4, 8, 12]))
+        L = 2 * deg * C
+        causal = True  # the train path rings causal/SWA attention only
+        window = draw(st.sampled_from([0, 0, C - 1, 2 * C + 1]))
+        return B, L, H, KV, dh, bq, bk, causal, window, deg
+    L = draw(st.integers(2, 96))
     window = draw(st.sampled_from([0, 0, 7, 24])) if causal else 0
     return B, L, H, KV, dh, bq, bk, causal, window
 
@@ -198,6 +212,62 @@ def test_flash_grad_of_sum_parity_all_shapes(shape, seed):
     def g(q_, k_, v_):
         return _flash_oracle(q_, k_, v_, causal=causal, window=window).sum()
 
+    for mine, oracle in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                            jax.grad(g, (0, 1, 2))(q, k, v)):
+        denom = max(float(jnp.linalg.norm(oracle)), 1e-12)
+        assert float(jnp.linalg.norm(mine - oracle)) / denom < 1e-5
+
+
+@pytest.mark.multidevice
+@settings(max_examples=5, deadline=None)
+@given(shape=flash_shapes(cp=True), seed=st.integers(0, 2**30))
+def test_ring_parity_random_shapes(shape, seed):
+    """Ring context-parallel attention == single-device flash (fwd and
+    grad-of-sum, f32 rel < 1e-5) for random shapes and cp degrees, on the
+    forced-8-device harness. Inputs ride the zigzag permutation exactly
+    as the shard_map executor applies it."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.kernels.ring_attention import (
+        ring_attention,
+        zigzag_inverse_permutation,
+        zigzag_permutation,
+        zigzag_shard_positions,
+    )
+
+    B, L, H, KV, dh, bq, bk, causal, window, cp = shape
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, L, H, dh))
+    k = jax.random.normal(ks[1], (B, L, KV, dh))
+    v = jax.random.normal(ks[2], (B, L, KV, dh))
+    mesh = Mesh(np.array(jax.devices()[:cp]), ("context",))
+    perm = zigzag_permutation(L, cp)
+    inv = zigzag_inverse_permutation(L, cp)
+    cid = jnp.arange(cp, dtype=jnp.int32)
+
+    def body(qs, ks_, vs, c):
+        pos = zigzag_shard_positions(c[0], L, cp)
+        pos = jnp.broadcast_to(pos[None, :], (qs.shape[0], pos.shape[0]))
+        return ring_attention(qs, ks_, vs, pos, axis_name="context", cp=cp,
+                              causal=causal, window=window, bq=bq, bk=bk)
+
+    ring = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "context"),) * 3 + (P("context"),),
+        out_specs=P(None, "context"), check_rep=False))
+
+    def f(q_, k_, v_):
+        return jnp.sum(jnp.sin(ring(q_[:, perm], k_[:, perm], v_[:, perm], cid)))
+
+    def g(q_, k_, v_):
+        return jnp.sum(jnp.sin(flash_attention(
+            q_, k_, v_, causal=causal, window=window, bq=bq, bk=bk)))
+
+    out = np.asarray(ring(q[:, perm], k[:, perm], v[:, perm], cid))[:, inv]
+    ref_o = np.asarray(flash_attention(q, k, v, causal=causal, window=window,
+                                       bq=bq, bk=bk))
+    assert np.abs(out - ref_o).max() / (np.abs(ref_o).max() + 1e-9) < 1e-5
     for mine, oracle in zip(jax.grad(f, (0, 1, 2))(q, k, v),
                             jax.grad(g, (0, 1, 2))(q, k, v)):
         denom = max(float(jnp.linalg.norm(oracle)), 1e-12)
